@@ -1,0 +1,49 @@
+"""Reduced-model step benchmarks on CPU: wall time per train/decode step for
+every assigned architecture (smoke-scale) — catches pathological regressions
+in the model code itself."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ALL_ARCHS, reduced_config
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_state, make_train_step
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch in sorted(ALL_ARCHS):
+        cfg = reduced_config(ALL_ARCHS[arch])
+        model = build_model(cfg, remat_policy="none")
+        state = init_state(model, key)
+        b, s = 2, 32
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.frontend == "vision":
+            batch["input_embeds"] = jnp.zeros((b, s // 8, cfg.d_model),
+                                              jnp.float32)
+        if cfg.frontend == "audio":
+            batch["input_embeds"] = jnp.zeros((b, s, cfg.d_model),
+                                              jnp.float32)
+            batch["tokens"] = batch["labels"] = toks[:, :8]
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+        state, m = step(state, batch)          # compile + warmup
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append({
+            "name": f"model_step/{arch}",
+            "us_per_call": us,
+            "derived": f"loss={float(m['loss']):.3f} reduced b={b} s={s}",
+        })
+    return rows

@@ -1,0 +1,62 @@
+"""Paper Fig. 7: PAR-time comparison, one row per benchmark.
+
+Columns map to the paper's three bars:
+  vivado_x86      → full XLA trace+lower+compile of the same kernel (the
+                    'vendor backend flow' analogue on this machine)
+  overlay_par_x86 → our overlay place+route on this machine
+  (the paper's Overlay-PAR-Zynq row is the same flow on a 667 MHz ARM; we
+  report the x86 numbers and the paper's measured ratios alongside)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.jit import jit_compile
+from repro.core.overlay import OverlaySpec
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+
+
+def _xla_compile_time(ck) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    g = ck.dfg
+    n_in = len(g.inputs)
+
+    def f(*xs):
+        return tuple(g.evaluate(list(xs)))
+
+    args = [jnp.zeros((4096,), jnp.float32) for _ in range(n_in)]
+    t0 = time.perf_counter()
+    jax.jit(f).lower(*args).compile()
+    return (time.perf_counter() - t0) * 1e3
+
+
+def run() -> List[Dict]:
+    rows = []
+    for name, (src, paper_replicas, _oracle) in sorted(BENCHMARKS.items()):
+        ck = jit_compile(src, SPEC, max_replicas=paper_replicas)
+        xla_ms = _xla_compile_time(ck)
+        # the vendor-backend analogue of the paper's Vivado column is the
+        # paper's own measured direct-FPGA PAR time (resource_table rows);
+        # xla_elementwise is just XLA:CPU jitting the same tiny pointwise
+        # graph — a floor, not a backend flow.
+        from benchmarks.resource_table import PAPER_DIRECT
+        vivado_s = PAPER_DIRECT[name]["par_s"]
+        rows.append({
+            "name": f"par_time/{name}({ck.plan.replicas})",
+            "us_per_call": ck.par_time_ms * 1e3,
+            "derived": (f"overlay_par={ck.par_time_ms:.1f}ms "
+                        f"frontend={ck.stage_times_ms['frontend']:.1f}ms "
+                        f"paper_vivado={vivado_s}s "
+                        f"speedup_vs_vivado="
+                        f"{vivado_s * 1e3 / max(ck.par_time_ms, 1e-9):.0f}x "
+                        f"xla_elementwise={xla_ms:.1f}ms"),
+        })
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 6: throughput scaling via kernel replication on overlays of
+different sizes (2x2 … 8x8) with 1-DSP and 2-DSP FUs."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.jit import jit_compile
+from repro.core.overlay import OverlaySpec
+from repro.core.place import PlacementError
+
+
+def run() -> List[Dict]:
+    rows = []
+    src = BENCHMARKS["chebyshev"][0]
+    for dsp in (1, 2):
+        for size in (2, 3, 4, 5, 6, 7, 8):
+            spec = OverlaySpec(width=size, height=size, dsp_per_fu=dsp)
+            try:
+                ck = jit_compile(src, spec, place_effort=0.3)
+            except PlacementError:
+                continue
+            gops = ck.throughput_gops()
+            peak = spec.peak_gops()
+            rows.append({
+                "name": f"replication/chebyshev_{size}x{size}_dsp{dsp}",
+                "us_per_call": ck.par_time_ms * 1e3,
+                "derived": (f"replicas={ck.plan.replicas} "
+                            f"gops={gops:.2f} peak={peak:.1f} "
+                            f"frac={gops / peak:.2f} "
+                            f"limited_by={ck.plan.limited_by}"),
+            })
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run artifacts (reads
+experiments/dryrun_single_pod.json if present)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "dryrun_single_pod.json")
+
+
+def run() -> List[Dict]:
+    if not os.path.exists(ART):
+        return [{"name": "roofline/missing", "us_per_call": 0,
+                 "derived": "run repro.launch.dryrun --all first"}]
+    with open(ART) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if "roofline" not in c:
+            reason = c.get("skipped", c.get("error", "?"))
+            rows.append({"name": f"roofline/{c['arch']}/{c['shape']}",
+                         "us_per_call": 0,
+                         "derived": f"SKIP: {str(reason)[:80]}"})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "name": f"roofline/{c['arch']}/{c['shape']}",
+            "us_per_call": r["step_s"] * 1e6,
+            "derived": (f"dom={r['dominant']} "
+                        f"comp={r['compute_s']*1e3:.2f}ms "
+                        f"mem={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms "
+                        f"mfu={r['mfu']:.3f} "
+                        f"useful={r['useful_flops_ratio']:.2f}"),
+        })
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  par_time            → paper Fig. 7  (PAR-time comparison)
+  replication_scaling → paper Fig. 6  (throughput vs replication)
+  resource_table      → paper Table III
+  reconfig_time       → paper §IV     (config swap vs recompile)
+  overlay_exec_perf   → executor micro-benchmark
+  model_step          → per-arch reduced train-step wall time
+  roofline_report     → §Roofline table from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (model_step, overlay_exec_perf, par_time,
+                        reconfig_time, replication_scaling, resource_table,
+                        roofline_report)
+
+SUITES = {
+    "par_time": par_time.run,
+    "replication_scaling": replication_scaling.run,
+    "resource_table": resource_table.run,
+    "reconfig_time": reconfig_time.run,
+    "overlay_exec_perf": overlay_exec_perf.run,
+    "model_step": model_step.run,
+    "roofline_report": roofline_report.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=sorted(SUITES), default=None,
+                    help="run one suite (default: all)")
+    args = ap.parse_args()
+    names = [args.suite] if args.suite else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for n in names:
+        try:
+            for row in SUITES[n]():
+                print(f"{row['name']},{row['us_per_call']:.2f},"
+                      f"\"{row['derived']}\"")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{n}/ERROR,0,\"{type(e).__name__}: {e}\"")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

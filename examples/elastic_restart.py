@@ -1,0 +1,89 @@
+"""Fault-tolerance scenario: train → simulated node failure → elastic
+restart on a smaller cluster plan, resuming from the validated checkpoint.
+
+This is the paper's resource-aware replication at cluster scale: the
+runtime exposes fewer resources after the failure, and the planner picks a
+new coherent (dp × tp) mesh without touching model code — exactly like the
+overlay compiler picking a smaller replication factor when 'other logic'
+eats fabric (paper Fig. 5).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_arch, reduced_config
+from repro.core.replicate import plan_cluster
+from repro.data.pipeline import SyntheticTokens
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train.step import init_state, make_train_step, state_specs
+
+
+def _mesh_for(plan):
+    return jax.make_mesh(plan.mesh_shape, ("data", "model"))
+
+
+def _sharded(mesh, model, state):
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs(model),
+                      is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(state, sh), sh
+
+
+def main() -> None:
+    cfg = reduced_config(get_arch("llama3-8b"))
+    model = build_model(cfg, remat_policy="none")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+    ds = SyntheticTokens(cfg.vocab, seq=32, batch=4)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        # phase 1: "healthy cluster" — plan for all visible devices
+        n0 = len(jax.devices())
+        plan0 = plan_cluster(n0, model_shards=1)
+        print(f"phase 1: {n0} devices → mesh {plan0.mesh_shape}")
+        mesh0 = _mesh_for(plan0)
+        state, sh0 = _sharded(mesh0, model, init_state(model,
+                                                       jax.random.PRNGKey(0)))
+        step0 = jax.jit(make_train_step(model, opt),
+                        in_shardings=(sh0, None), out_shardings=(sh0, None))
+        loop = TrainLoop(step0, state, ds,
+                         TrainLoopConfig(total_steps=30, checkpoint_every=10,
+                                         checkpoint_dir=ckdir, log_every=10))
+        loop.run()
+        print(f"  checkpointed through step 30; "
+              f"'node failure' now removes devices")
+
+        # phase 2: a "failure" leaves fewer devices — replan and resume.
+        # On CPU we model the failure by replanning for n-1 devices; the
+        # elastic planner benches the stragglers and rebuilds the mesh.
+        plan1 = plan_cluster(max(1, n0 - 1), model_shards=1)
+        print(f"phase 2: {max(1, n0 - 1)} devices → mesh {plan1.mesh_shape} "
+              f"(dropped {plan1.dropped_devices})")
+        mesh1 = _mesh_for(plan1)
+        fresh, sh1 = _sharded(mesh1, model,
+                              init_state(model, jax.random.PRNGKey(1)))
+        step1 = jax.jit(make_train_step(model, opt),
+                        in_shardings=(sh1, None), out_shardings=(sh1, None))
+        loop2 = TrainLoop(step1, fresh, ds,
+                          TrainLoopConfig(total_steps=60,
+                                          checkpoint_every=10,
+                                          checkpoint_dir=ckdir,
+                                          log_every=10))
+        assert loop2.try_restore(), "must resume from phase-1 checkpoint"
+        # restored host arrays are re-sharded onto the NEW mesh
+        loop2.state = jax.device_put(loop2.state, sh1)
+        print(f"  resumed at step {loop2.start_step} on the new mesh")
+        out = loop2.run()
+        losses = [m["loss"] for m in out["metrics"]]
+        print(f"  continued to step {out['final_step']}; "
+              f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+        print("elastic restart OK")
+
+
+if __name__ == "__main__":
+    main()

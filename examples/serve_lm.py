@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests through the decode path
+(KV cache, batched sampling) — the serving-side end-to-end example.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    # the serving driver is the real entry point; this example drives it the
+    # way an operator would
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen3-14b", "--reduced", "--batch", "4",
+           "--prompt-len", "12", "--gen", "24"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

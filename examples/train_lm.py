@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on CPU through the full production code path (pjit sharding,
+checkpointing, restart, straggler watchdog, overlay-JIT'd activations).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train.step import init_state, make_train_step, state_specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M llama-family config
+    cfg = dataclasses.replace(
+        get_arch("llama3-8b"), n_layers=6, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=1536, vocab=8192, head_dim=64)
+    model = build_model(cfg, remat_policy="none")
+    print(f"params: {cfg.param_count():,}")
+
+    mesh = make_host_mesh()
+    state = init_state(model, jax.random.PRNGKey(0))
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      state_specs(model), is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, sh)
+    step_fn = jax.jit(make_train_step(
+        model, AdamWConfig(lr=1e-3, warmup_steps=20,
+                           total_steps=args.steps)),
+        in_shardings=(sh, None), out_shardings=(sh, None),
+        donate_argnums=(0,))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        loop = TrainLoop(step_fn, state,
+                         SyntheticTokens(cfg.vocab, args.seq, args.batch),
+                         TrainLoopConfig(total_steps=args.steps,
+                                         checkpoint_dir=ckdir,
+                                         checkpoint_every=100,
+                                         log_every=25))
+        out = loop.run()
+        losses = [m["loss"] for m in out["metrics"]]
+        for m in out["metrics"]:
+            print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+                  f"{m['dt_s'] * 1e3:6.0f} ms")
+        print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} "
+              f"({'improved' if losses[-1] < losses[0] else 'FLAT'})")
+        assert losses[-1] < losses[0], "training did not reduce loss"
+
+        # restart-from-checkpoint proof
+        state2 = init_state(model, jax.random.PRNGKey(0))
+        loop2 = TrainLoop(step_fn, jax.device_put(state2, sh),
+                          SyntheticTokens(cfg.vocab, args.seq, args.batch),
+                          TrainLoopConfig(total_steps=args.steps + 10,
+                                          checkpoint_dir=ckdir))
+        assert loop2.try_restore(), "restore failed"
+        print(f"restart: resumed from step {loop2.start_step} OK")
+
+
+if __name__ == "__main__":
+    main()

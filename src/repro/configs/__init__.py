@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture, plus the
+paper's own OpenCL benchmark suite (paper_suite).  ``ALL_ARCHS`` maps
+--arch ids to ArchConfig factories; ``SHAPES`` defines the assigned
+input-shape set."""
+
+from repro.configs.registry import (ALL_ARCHS, SHAPES, get_arch,  # noqa
+                                    reduced_config, shape_applicable)

@@ -1,0 +1,197 @@
+"""The JIT driver: end-to-end run-time compilation to the overlay.
+
+``jit_compile`` chains every stage of the paper's Fig. 2 flow —
+frontend → optimize → FU-aware fuse → resource-aware replicate → place →
+route → latency-balance → bitstream + linear program — and returns a
+``CompiledKernel`` with per-stage wall times (the PAR-time benchmarks read
+these) and three execution paths:
+
+  * ``__call__``       — "compiled mode": the routed DFG evaluated as a jnp
+                         expression; embeds in larger jitted graphs.
+  * ``run_overlay``    — the config-driven Pallas executor (VMEM-tiled VLIW
+                         interpreter); program is data, so swapping kernels
+                         does NOT recompile XLA (the 42 µs-reconfig analogue).
+  * ``run_reference``  — pure-numpy oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import dfg as dfg_mod
+from repro.core.bitstream import Bitstream, generate
+from repro.core.dfg import DFG, optimize, trace
+from repro.core.fuse import FUGraph, to_fu_graph
+from repro.core.ir import compile_opencl_to_dfg, _lower_consts
+from repro.core.latency import LatencyAssignment, balance
+from repro.core.overlay import OverlaySpec
+from repro.core.place import Placement, place
+from repro.core.program import OverlayProgram, compile_program
+from repro.core.replicate import ReplicationPlan, plan_replication, \
+    throughput_gops
+from repro.core.route import RoutingResult, route
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    name: str
+    dfg: DFG
+    fug: FUGraph
+    spec: OverlaySpec
+    plan: ReplicationPlan
+    placement: Placement
+    routing: RoutingResult
+    latency: LatencyAssignment
+    bitstream: Bitstream
+    program: OverlayProgram
+    stage_times_ms: Dict[str, float]
+
+    # ------------------------------------------------------------- numbers
+    @property
+    def par_time_ms(self) -> float:
+        return (self.stage_times_ms["place"] + self.stage_times_ms["route"])
+
+    @property
+    def compile_time_ms(self) -> float:
+        return sum(self.stage_times_ms.values())
+
+    @property
+    def pipeline_depth(self) -> int:
+        return self.latency.pipeline_depth
+
+    def throughput_gops(self) -> float:
+        return throughput_gops(self.fug, self.spec, self.plan.replicas)
+
+    def resources(self) -> Dict[str, int]:
+        return dict(
+            fus=self.plan.fus_used,
+            dsp=self.plan.fus_used * self.spec.dsp_per_fu,
+            io=self.plan.io_used,
+            wires=self.routing.wires_used(),
+            config_bytes=self.bitstream.n_bytes,
+        )
+
+    # ------------------------------------------------------------ execution
+    def __call__(self, *inputs):
+        """Compiled mode: evaluate the routed DFG with the caller's arrays
+        (jnp or numpy). Semantically identical to the configured overlay."""
+        return _unpack(self.dfg.evaluate(list(inputs)))
+
+    def run_reference(self, *inputs):
+        arrs = [np.asarray(x, np.float32) for x in inputs]
+        return _unpack(self.dfg.evaluate(arrs))
+
+    def run_overlay(self, *inputs, interpret: bool = True):
+        """Execute through the Pallas overlay-executor kernel."""
+        from repro.kernels.overlay_exec import ops
+        return _unpack(ops.execute(self.program, list(inputs),
+                                   interpret=interpret))
+
+
+def _unpack(outs: List[Any]):
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
+              name: Optional[str]) -> DFG:
+    if isinstance(kernel, DFG):
+        return optimize(_lower_consts(kernel))
+    if isinstance(kernel, str):
+        return compile_opencl_to_dfg(kernel)
+    if n_inputs is None:
+        raise ValueError("n_inputs required when tracing a python kernel")
+    return optimize(_lower_consts(trace(kernel, n_inputs, name)))
+
+
+def jit_compile(kernel: Union[str, Callable, DFG],
+                spec: OverlaySpec,
+                n_inputs: Optional[int] = None,
+                name: Optional[str] = None,
+                max_replicas: Optional[int] = None,
+                fu_headroom: int = 0,
+                io_headroom: int = 0,
+                seed: int = 0,
+                place_effort: float = 1.0) -> CompiledKernel:
+    """Full JIT pipeline. Raises PlacementError/RoutingError/LatencyError on
+    genuine mapping failures (kernel too big for the exposed overlay)."""
+    times: Dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    g = _frontend(kernel, n_inputs, name)
+    times["frontend"] = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
+    times["fuse"] = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    plan = plan_replication(fug, spec, max_replicas=max_replicas,
+                            fu_headroom=fu_headroom, io_headroom=io_headroom)
+    if plan.replicas == 0:
+        from repro.core.place import PlacementError
+        raise PlacementError(
+            f"kernel needs {fug.n_fus} FUs / {fug.n_io} IO; overlay exposes "
+            f"{spec.n_fus - fu_headroom} FUs / {spec.n_io - io_headroom} IO")
+    times["replicate"] = (time.perf_counter() - t0) * 1e3
+
+    # P&R with resource-aware back-off: if the requested replication is
+    # unroutable (congestion) or latency-unbalanceable, shed replicas — the
+    # compiler's job is the best mapping that *fits*, exactly as on the
+    # hardware.
+    from repro.core.latency import LatencyError
+    from repro.core.route import RoutingError
+    import dataclasses as _dc
+
+    last_err: Optional[Exception] = None
+    placement = routing = lat = None
+    t_place = t_route = t_lat = 0.0
+    replicas = plan.replicas
+    while replicas >= 1:
+        try:
+            t0 = time.perf_counter()
+            placement = place(fug, spec, replicas=replicas, seed=seed,
+                              effort=place_effort)
+            t_place = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            routing = route(fug, spec, placement, replicas=replicas)
+            t_route = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            lat = balance(fug, spec, routing)
+            t_lat = (time.perf_counter() - t0) * 1e3
+            break
+        except (RoutingError, LatencyError) as e:
+            last_err = e
+            replicas -= max(1, replicas // 8)
+    if placement is None or routing is None or lat is None:
+        raise last_err  # even a single copy does not map
+    if replicas != plan.replicas:
+        plan = _dc.replace(plan, replicas=replicas,
+                           fus_used=replicas * fug.n_fus,
+                           io_used=replicas * fug.n_io,
+                           limited_by="congestion")
+    times["place"] = t_place
+    times["route"] = t_route
+    times["latency"] = t_lat
+
+    t0 = time.perf_counter()
+    bs = generate(fug, spec, placement, routing, lat, plan.replicas)
+    prog = compile_program(fug.dfg)
+    times["bitstream"] = (time.perf_counter() - t0) * 1e3
+
+    return CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
+                          routing, lat, bs, prog, times)
+
+
+def overlay_jit(fn: Callable, n_inputs: int, spec: Optional[OverlaySpec] = None,
+                **kw) -> CompiledKernel:
+    """Decorator-style helper for JAX model code: declare a pointwise
+    datapath as an overlay kernel.
+
+    >>> swish_poly = overlay_jit(lambda x: x * (x * (x * 0.044715 + 1.0)), 1)
+    """
+    spec = spec or OverlaySpec()
+    return jit_compile(fn, spec, n_inputs=n_inputs, **kw)

@@ -1,0 +1,174 @@
+"""VPR-style simulated-annealing placement of the FU netlist (paper §III-D).
+
+Maps SuperNodes (FUs) to overlay tiles and kernel I/O to perimeter IO sites,
+minimising total half-perimeter bounding-box wirelength — the same cost VPR
+uses.  Deterministic given the seed, so configs are reproducible artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.fuse import FUGraph
+from repro.core.overlay import Coord, OverlaySpec
+
+
+@dataclasses.dataclass
+class Placement:
+    fu_pos: Dict[Tuple[int, int], Coord]    # (replica, sid) -> tile
+    in_pos: Dict[Tuple[int, int], Coord]    # (replica, invar idx) -> io site
+    out_pos: Dict[Tuple[int, int], Coord]   # (replica, outvar idx) -> io site
+    cost: float
+    moves: int
+
+
+class PlacementError(RuntimeError):
+    pass
+
+
+def _nets(fug: FUGraph, replica: int):
+    """Edges as (src key, dst key) with keys ('fu'|'in'|'out', replica, id)."""
+    for skind, sid, dkind, did, _port in fug.edges:
+        yield (skind, replica, sid), (dkind, replica, did)
+
+
+def place(fug: FUGraph, spec: OverlaySpec, replicas: int = 1,
+          seed: int = 0, effort: float = 1.0) -> Placement:
+    """Anneal all replicas jointly onto one overlay."""
+    rng = random.Random(seed)
+    n_fu_sites = spec.n_fus
+    need_fu = fug.n_fus * replicas
+    if need_fu > n_fu_sites:
+        raise PlacementError(
+            f"{need_fu} FUs > {n_fu_sites} sites on {spec.width}x{spec.height}")
+    io_sites = spec.io_sites()
+    need_in = fug.n_in * replicas
+    need_out = fug.n_out * replicas
+    if need_in + need_out > len(io_sites):
+        raise PlacementError(
+            f"I/O demand {need_in + need_out} > {len(io_sites)} pads")
+
+    # ---- initial placement: row-major FU scatter, IO round-robin
+    tiles = [(x, y) for y in range(spec.height) for x in range(spec.width)]
+    rng.shuffle(tiles)
+    fu_keys = [(r, s.sid) for r in range(replicas) for s in fug.supers]
+    fu_pos = {k: tiles[i] for i, k in enumerate(fu_keys)}
+    free_tiles = tiles[len(fu_keys):]
+
+    io_order = list(io_sites)
+    rng.shuffle(io_order)
+    in_keys = [(r, i) for r in range(replicas) for i in range(fug.n_in)]
+    out_keys = [(r, i) for r in range(replicas) for i in range(fug.n_out)]
+    in_pos = {k: io_order[i] for i, k in enumerate(in_keys)}
+    out_pos = {k: io_order[len(in_keys) + i] for i, k in enumerate(out_keys)}
+    free_io = io_order[len(in_keys) + len(out_keys):]
+
+    nets: List[Tuple[Tuple, Tuple]] = []
+    for r in range(replicas):
+        nets.extend(_nets(fug, r))
+
+    def pos_of(key) -> Coord:
+        kind, r, i = key
+        if kind == "fu":
+            return fu_pos[(r, i)]
+        if kind == "in":
+            return in_pos[(r, i)]
+        return out_pos[(r, i)]
+
+    def net_cost(net) -> float:
+        (a, b) = net
+        ax, ay = pos_of(a)
+        bx, by = pos_of(b)
+        return abs(ax - bx) + abs(ay - by)
+
+    cost = sum(net_cost(n) for n in nets)
+
+    # nets touching each movable key (for incremental delta)
+    touching: Dict[Tuple, List[int]] = {}
+    for idx, (a, b) in enumerate(nets):
+        touching.setdefault(a, []).append(idx)
+        touching.setdefault(b, []).append(idx)
+
+    n_moves = int(effort * 200 * max(1, len(fu_keys) + len(in_keys)))
+    t = max(4.0, cost / max(1, len(nets)))  # initial temperature
+    t_min = 0.005
+    alpha = (t_min / t) ** (1.0 / max(1, n_moves))
+    moves_done = 0
+
+    def swap_fu(k1, k2=None, j=None):
+        """Swap two FUs, or swap k1 with free tile j. Returns cost delta."""
+        affected = set(touching.get(("fu",) + k1, []))
+        if k2 is not None:
+            affected |= set(touching.get(("fu",) + k2, []))
+        before = sum(net_cost(nets[i]) for i in affected)
+        if k2 is None:
+            fu_pos[k1], free_tiles[j] = free_tiles[j], fu_pos[k1]
+        else:
+            fu_pos[k1], fu_pos[k2] = fu_pos[k2], fu_pos[k1]
+        after = sum(net_cost(nets[i]) for i in affected)
+        return after - before
+
+    def swap_io(table, k1, free_list):
+        kind = "in" if table is in_pos else "out"
+        affected = set(touching.get((kind,) + k1, []))
+        before = sum(net_cost(nets[i]) for i in affected)
+        if free_list and rng.random() < 0.5:
+            j = rng.randrange(len(free_list))
+            table[k1], free_list[j] = free_list[j], table[k1]
+            undo = ("free", j)
+        else:
+            keys = list(table.keys())
+            k2 = keys[rng.randrange(len(keys))]
+            table[k1], table[k2] = table[k2], table[k1]
+            undo = ("swap", k2)
+        after = sum(net_cost(nets[i]) for i in affected)
+        return after - before, undo
+
+    for step in range(n_moves):
+        roll = rng.random()
+        if fu_keys and (roll < 0.7 or not in_keys):
+            k1 = fu_keys[rng.randrange(len(fu_keys))]
+            use_free = free_tiles and rng.random() < 0.4
+            if use_free:
+                j = rng.randrange(len(free_tiles))
+                delta = swap_fu(k1, None, j)
+                if delta <= 0 or rng.random() < math.exp(-delta / t):
+                    cost += delta
+                    moves_done += 1
+                else:
+                    swap_fu(k1, None, j)   # swap back: exact inverse
+            else:
+                k2 = fu_keys[rng.randrange(len(fu_keys))]
+                if k2 == k1:
+                    continue
+                delta = swap_fu(k1, k2)
+                if delta <= 0 or rng.random() < math.exp(-delta / t):
+                    cost += delta
+                    moves_done += 1
+                else:
+                    swap_fu(k1, k2)        # swap back
+        else:
+            which = in_pos if (rng.random() < 0.5 and in_keys) or not out_keys \
+                else out_pos
+            keys = in_keys if which is in_pos else out_keys
+            if not keys:
+                continue
+            k1 = keys[rng.randrange(len(keys))]
+            free_list = free_io
+            delta, undo = swap_io(which, k1, free_list)
+            if delta <= 0 or rng.random() < math.exp(-delta / t):
+                cost += delta
+                moves_done += 1
+            else:
+                kind, j_or_k = undo
+                if kind == "free":
+                    which[k1], free_list[j_or_k] = free_list[j_or_k], which[k1]
+                else:
+                    which[k1], which[j_or_k] = which[j_or_k], which[k1]
+        t *= alpha
+
+    return Placement(dict(fu_pos), dict(in_pos), dict(out_pos),
+                     float(cost), moves_done)

@@ -1,0 +1,141 @@
+"""OpenCL-like runtime (paper §IV: pocl on the Zynq ARM).
+
+A minimal, faithful object model — Platform / Device / Context / Program /
+Kernel / Buffer — whose Device exposes the overlay geometry to the JIT
+compiler (the paper's key runtime↔compiler contract), and whose Program
+objects are built *at run time* (`clBuildProgram` semantics) through
+:func:`repro.core.jit.jit_compile`.
+
+The runtime also owns the *resource ledger*: when other logic (or another
+kernel) occupies part of the overlay, subsequent builds see only the free
+remainder — this is what "resource-aware" means operationally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.jit import CompiledKernel, jit_compile
+from repro.core.overlay import OverlaySpec
+
+
+class RuntimeError_(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Device:
+    """One overlay instance living on a fabric region."""
+    name: str
+    spec: OverlaySpec
+    fu_used: int = 0
+    io_used: int = 0
+
+    @property
+    def fu_free(self) -> int:
+        return self.spec.n_fus - self.fu_used
+
+    @property
+    def io_free(self) -> int:
+        return self.spec.n_io - self.io_used
+
+    def info(self) -> Dict[str, object]:
+        """CL_DEVICE_* analogue; everything the compiler needs."""
+        return dict(name=self.name, width=self.spec.width,
+                    height=self.spec.height, dsp_per_fu=self.spec.dsp_per_fu,
+                    fu_free=self.fu_free, io_free=self.io_free,
+                    fclk_mhz=self.spec.fclk_mhz,
+                    peak_gops=self.spec.peak_gops())
+
+
+class Platform:
+    def __init__(self, devices: Optional[List[Device]] = None):
+        self.devices = devices or [Device("overlay0", OverlaySpec())]
+
+    @staticmethod
+    def default() -> "Platform":
+        return Platform()
+
+
+class Buffer:
+    """cl_mem analogue: host-backed, device-format float32 words."""
+
+    def __init__(self, data: Union[np.ndarray, Sequence[float]]):
+        self.data = np.asarray(data, np.float32)
+
+    def read(self) -> np.ndarray:
+        return self.data.copy()
+
+
+class Context:
+    def __init__(self, device: Optional[Device] = None):
+        self.device = device or Platform.default().devices[0]
+        self._events: List[Dict[str, float]] = []
+
+    # ----------------------------------------------------------- programs
+    def build_program(self, source: Union[str, Callable],
+                      n_inputs: Optional[int] = None,
+                      max_replicas: Optional[int] = None,
+                      name: Optional[str] = None) -> "Program":
+        """clBuildProgram: JIT-compile against the *currently free* overlay
+        resources exposed by the device."""
+        t0 = time.perf_counter()
+        ck = jit_compile(source, self.device.spec, n_inputs=n_inputs,
+                         name=name, max_replicas=max_replicas,
+                         fu_headroom=self.device.fu_used,
+                         io_headroom=self.device.io_used)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        return Program(self, ck, build_ms)
+
+    def reserve(self, fus: int, io: int = 0) -> None:
+        """Model 'other logic' consuming fabric (paper Fig. 5)."""
+        if fus > self.device.fu_free or io > self.device.io_free:
+            raise RuntimeError_("reservation exceeds free resources")
+        self.device.fu_used += fus
+        self.device.io_used += io
+
+    def release(self, fus: int, io: int = 0) -> None:
+        self.device.fu_used = max(0, self.device.fu_used - fus)
+        self.device.io_used = max(0, self.device.io_used - io)
+
+
+class Program:
+    def __init__(self, ctx: Context, ck: CompiledKernel, build_ms: float):
+        self.ctx = ctx
+        self.compiled = ck
+        self.build_ms = build_ms
+
+    def create_kernel(self) -> "Kernel":
+        return Kernel(self)
+
+    def configure_overlay(self) -> float:
+        """'Load the bitstream': returns modelled config time in µs."""
+        return self.compiled.bitstream.load_time_us()
+
+
+class Kernel:
+    def __init__(self, program: Program):
+        self.program = program
+        self.args: List[Buffer] = []
+
+    def set_args(self, *buffers: Buffer) -> "Kernel":
+        self.args = list(buffers)
+        return self
+
+    def enqueue(self, use_overlay_executor: bool = False):
+        """clEnqueueNDRangeKernel: run over all work-items of the buffers."""
+        ck = self.program.compiled
+        ins = [b.data for b in self.args]
+        if len(ins) != len(ck.dfg.inputs):
+            raise RuntimeError_(
+                f"kernel expects {len(ck.dfg.inputs)} buffers, got {len(ins)}")
+        if use_overlay_executor:
+            outs = ck.run_overlay(*ins)
+        else:
+            outs = ck.run_reference(*ins)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        return tuple(Buffer(np.asarray(o)) for o in outs)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+overlay_exec     — the paper's overlay, executed as a config-driven VLIW
+                   interpreter over VMEM tiles (program = data → swapping
+                   kernels does not recompile XLA).
+flash_attention  — blockwise online-softmax attention, GQA + causal + SWA.
+rmsnorm          — fused RMSNorm.
+"""

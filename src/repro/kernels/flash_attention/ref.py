@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for blockwise (flash) attention with GQA + causal mask +
+optional sliding window. This is also the attention used inside the big-model
+dry-runs ('ref' impl): XLA fuses it adequately and it lowers on any backend.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, scale: Optional[float] = None):
+    """q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, D) in q.dtype; softmax in f32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads without materialising copies
+    qf = qf.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-style)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, window: Optional[int] = None,
+                     scale: Optional[float] = None):
+    """Single-token decode: q (B, Hq, 1, D) against a full KV cache."""
+    return attention(q, k_cache, v_cache, causal=True, window=window,
+                     scale=scale)

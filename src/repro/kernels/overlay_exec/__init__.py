@@ -1,0 +1,1 @@
+from repro.kernels.overlay_exec import ops, ref  # noqa: F401

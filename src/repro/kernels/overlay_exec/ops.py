@@ -1,0 +1,90 @@
+"""Jit'd wrapper around the overlay-executor Pallas kernel.
+
+``build_image`` lowers an OverlayProgram to the executor's canonical
+execution image: instructions plus final PASS moves that park each output in
+the last ``n_out`` register slots.  Programs padded to the same
+(n_instr, n_regs, n_in, n_out) signature share one compiled executable —
+swapping kernels is a scalar-operand change only (the reconfiguration
+benchmark measures exactly this).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.program import OP_PASS, OverlayProgram
+
+_LANE = 128
+
+
+def build_image(program: OverlayProgram, pad_to: int = 0,
+                pad_regs: int = 0) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """→ (instrs (M,6) i32, imms (M,) f32, n_regs_total, n_out)."""
+    p = program
+    n_out = len(p.out_slots)
+    # layout: [program regs | (pad gap) | trash | outputs] — outputs always
+    # occupy the LAST n_out slots (the executor's contract); trash absorbs
+    # padding NOPs.  pad_regs unifies register-file size across programs so
+    # swapped kernels share one compiled executable.
+    n_regs = max(p.n_regs + 1 + n_out, pad_regs)
+    if pad_regs and pad_regs < p.n_regs + 1 + n_out:
+        raise ValueError("pad_regs smaller than program register file")
+    out_base = n_regs - n_out
+    trash = out_base - 1
+    moves = [[OP_PASS, out_base + j, s, 0, 0, 0]
+             for j, s in enumerate(p.out_slots)]
+    instrs = np.concatenate(
+        [p.instrs.reshape(-1, 6),
+         np.asarray(moves, np.int32).reshape(-1, 6)], axis=0)
+    imms = np.concatenate([p.imms, np.zeros((len(moves),), np.float32)])
+    if pad_to:
+        if pad_to < instrs.shape[0]:
+            raise ValueError("pad_to smaller than program")
+        extra = pad_to - instrs.shape[0]
+        pad_rows = np.tile(np.asarray([[0, trash, 0, 0, 0, 0]], np.int32),
+                           (extra, 1))
+        instrs = np.concatenate([instrs, pad_rows], axis=0)
+        imms = np.concatenate([imms, np.zeros((extra,), np.float32)])
+    return instrs, imms, n_regs, n_out
+
+
+def _pick_block(n: int, n_regs: int, n_in: int, n_out: int,
+                vmem_budget: int = 2 << 20) -> int:
+    """Largest lane-aligned block whose register file fits the VMEM budget."""
+    per_item = (n_regs + n_in + n_out) * 4
+    b = max(_LANE, (vmem_budget // per_item) // _LANE * _LANE)
+    return int(min(b, 4096))
+
+
+def execute(program: OverlayProgram, inputs: Sequence, *,
+            interpret: bool = True, pad_to: int = 0,
+            pad_regs: int = 0) -> List[np.ndarray]:
+    """Run an OverlayProgram over flat work-item arrays via the Pallas
+    executor. Accepts any shaped arrays; work-items = flattened elements."""
+    import jax.numpy as jnp
+
+    from repro.kernels.overlay_exec.kernel import overlay_execute
+
+    arrs = [np.asarray(x, np.float32) for x in inputs]
+    shape = arrs[0].shape
+    n = int(np.prod(shape)) if shape else 1
+    x = np.stack([a.ravel() for a in arrs])           # (n_in, N)
+
+    instrs, imms, n_regs, n_out = build_image(program, pad_to=pad_to,
+                                              pad_regs=pad_regs)
+    n_in = x.shape[0]
+    block = _pick_block(n, n_regs, n_in, n_out)
+    n_pad = (n + block - 1) // block * block
+    if n_pad != n:
+        x = np.concatenate([x, np.zeros((n_in, n_pad - n), np.float32)],
+                           axis=1)
+
+    out = overlay_execute(jnp.asarray(instrs), jnp.asarray(imms),
+                          jnp.asarray(x),
+                          n_in=n_in, n_out=n_out,
+                          n_instr=int(instrs.shape[0]), n_regs=n_regs,
+                          block=block, interpret=interpret)
+    out = np.asarray(out)[:, :n]
+    return [out[j].reshape(shape) for j in range(n_out)]

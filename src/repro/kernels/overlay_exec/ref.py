@@ -1,0 +1,79 @@
+"""Pure-numpy/jnp oracle for the overlay executor.
+
+Interprets the same execution image the Pallas kernel runs: a register file
+of (R, N) values, one instruction at a time.  This is the ground truth the
+kernel is tested against (tests/test_overlay_exec.py sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.program import (
+    OP_ABS, OP_ADD, OP_IMULADD, OP_IMULSUB, OP_MAX, OP_MIN, OP_MUL,
+    OP_MULADD, OP_MULSUB, OP_NEG, OP_NOP, OP_PASS, OP_RSUB, OP_SUB,
+    OverlayProgram)
+
+
+def _apply(op: int, a, b, c, imm):
+    if op == OP_NOP:
+        return np.full_like(a, imm)
+    if op == OP_ADD:
+        return a + b
+    if op == OP_SUB:
+        return a - b
+    if op == OP_RSUB:
+        return b - a
+    if op == OP_MUL:
+        return a * b
+    if op == OP_MULADD:
+        return a * b + c
+    if op == OP_MULSUB:
+        return a * b - c
+    if op == OP_IMULADD:
+        return a * imm + b
+    if op == OP_IMULSUB:
+        return a * imm - b
+    if op == OP_PASS:
+        return a
+    if op == OP_ABS:
+        return np.abs(a)
+    if op == OP_NEG:
+        return -a
+    if op == OP_MIN:
+        return np.minimum(a, b)
+    if op == OP_MAX:
+        return np.maximum(a, b)
+    raise ValueError(f"bad opcode {op}")
+
+
+def execute_image(instrs: np.ndarray, imms: np.ndarray, n_regs: int,
+                  inputs: np.ndarray, n_out: int) -> np.ndarray:
+    """inputs: (n_in, N) → outputs (n_out, N); output slots are the last
+    ``n_out`` registers (the execution-image convention, see ops.py)."""
+    n_in, n = inputs.shape
+    regs = np.zeros((n_regs, n), np.float32)
+    regs[:n_in] = inputs
+    for k in range(instrs.shape[0]):
+        op, d, a, b, c, imm_port = (int(v) for v in instrs[k])
+        imm = float(imms[k])
+        va, vb, vc = regs[a], regs[b], regs[c]
+        if imm_port == 1:
+            vb = np.full_like(va, imm)
+        elif imm_port == 2:
+            vc = np.full_like(va, imm)
+        regs[d] = _apply(op, va, vb, vc, imm)
+    return regs[n_regs - n_out:]
+
+
+def execute(program: OverlayProgram, inputs: Sequence[np.ndarray]
+            ) -> List[np.ndarray]:
+    """Reference execution of an OverlayProgram on raw (unpadded) inputs."""
+    from repro.kernels.overlay_exec.ops import build_image
+    arrs = np.stack([np.asarray(x, np.float32).ravel() for x in inputs])
+    instrs, imms, n_regs, n_out = build_image(program)
+    out = execute_image(instrs, imms, n_regs, arrs, n_out)
+    shape = np.asarray(inputs[0]).shape
+    return [out[j].reshape(shape) for j in range(n_out)]

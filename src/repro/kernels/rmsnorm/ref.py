@@ -1,0 +1,12 @@
+"""Pure-jnp RMSNorm oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (var + eps) ** -0.5 * weight.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,93 @@
+"""Serving driver: batched autoregressive decode with a prefill phase.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ALL_ARCHS, get_arch, reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.train.step import make_serve_step
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALL_ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    mesh = make_host_mesh(args.model_shards)
+
+    key = jax.random.PRNGKey(0)
+    params = jax.device_put(model.init(key),
+                            _named(mesh, model.param_specs()))
+    max_len = args.prompt_len + args.gen
+    cache = jax.device_put(model.init_cache(args.batch, max_len),
+                           _named(mesh, model.cache_specs()))
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, (args.batch, args.prompt_len), np.int32)
+
+    # prefill: feed prompt tokens one step at a time through the decode path
+    # (token-recurrent prefill; a blockwise prefill is the prefill_* shape)
+    t0 = time.perf_counter()
+    tok = jnp.asarray(prompt[:, :1])
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = serve_step(params, cache,
+                                   jnp.asarray(prompt[:, i:i + 1]),
+                                   jnp.int32(i))
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = []
+    t0 = time.perf_counter()
+    key_s = key
+    for i in range(args.gen):
+        if args.temperature > 0:
+            key_s, sub = jax.random.split(key_s)
+            nxt = jax.random.categorical(sub, logits / args.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(nxt))
+        logits, cache = serve_step(params, cache, nxt,
+                                   jnp.int32(args.prompt_len + i))
+    jax.block_until_ready(logits)
+    t_gen = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"arch={args.arch} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill:.2f}s | "
+          f"decode {args.gen} tok in {t_gen:.2f}s "
+          f"({args.batch * args.gen / t_gen:.1f} tok/s)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.common import ArchConfig  # noqa: F401
+from repro.models.registry import build_model, get_config  # noqa: F401

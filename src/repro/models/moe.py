@@ -1,0 +1,170 @@
+"""Mixture-of-Experts transformer (mixtral-8x22b, qwen3-moe-235b-a22b).
+
+Dispatch is capacity-based (GShard-style) but gather/scatter-indexed rather
+than one-hot-matmul, so dispatch costs no MXU FLOPs: tokens are ranked into
+per-expert slots with a cumsum, scattered into an (E, C, d) buffer, run
+through the expert FFHs as one batched einsum, and combined back weighted by
+their router probabilities.  Tokens past capacity are dropped (standard
+capacity_factor semantics).
+
+Expert parallelism: expert-major weights shard the E axis across the model
+mesh axis when divisible (qwen3: 128e/16 = 8 per shard); otherwise (mixtral:
+8e on 16 shards) the FF dim is sharded within each expert (TP-in-expert).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.common import ArchConfig, dense_init, spec
+from repro.models.transformer import DenseLM
+
+
+def init_moe_mlp(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), scale_axis=1, dtype=cfg.dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), scale_axis=1, dtype=cfg.dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), scale_axis=1, dtype=cfg.dtype),
+    }
+
+
+def _dispatch_group(xf, p, cfg: ArchConfig):
+    """One dispatch group: xf (G, d) → (G, d).  Capacity is per-group."""
+    g, d = xf.shape
+    k, e = cfg.top_k, cfg.n_experts
+    cap = int(max(1, g * k / e * cfg.capacity_factor))
+
+    logits = xf.astype(jnp.float32) @ p["router"]            # (G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                         # (G, k)
+    w = (w / w.sum(-1, keepdims=True)).astype(xf.dtype)
+
+    fe = idx.reshape(-1)                                     # (G*k,)
+    onehot = jax.nn.one_hot(fe, e, dtype=jnp.int32)          # (G*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot              # rank within expert
+    slot = jnp.take_along_axis(ranks, fe[:, None], axis=1)[:, 0]
+    keep = (slot < cap)
+    slot_c = jnp.where(keep, slot, cap - 1)
+
+    tok = jnp.repeat(jnp.arange(g), k)
+    x_rep = xf[tok] * keep[:, None].astype(xf.dtype)         # (G*k, d)
+    buf = jnp.zeros((e, cap, d), xf.dtype).at[fe, slot_c].add(
+        jnp.where(keep[:, None], x_rep, 0))
+
+    # expert FFN as batched einsums over the expert axis
+    gt = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    act = jax.nn.silu(gt.astype(jnp.float32)).astype(xf.dtype) * up
+    y = jnp.einsum("ecf,efd->ecd", act, p["w_down"])         # (E, C, d)
+
+    y_tok = y[fe, slot_c] * keep[:, None].astype(xf.dtype)   # (G*k, d)
+    y_tok = y_tok * w.reshape(-1)[:, None]
+    return jnp.zeros((g, d), xf.dtype).at[tok].add(y_tok)
+
+
+def moe_mlp(p, x, cfg: ArchConfig, grouped: bool = False):
+    """x: (B, S, d) → (B, S, d).
+
+    grouped=False: one global dispatch group (capacity pooled over the whole
+    global batch — GShard 'single group', simple but the (E, C, d) buffer is
+    a global tensor the partitioner must place).
+    grouped=True: one dispatch group per sequence (batch row): every
+    dispatch tensor carries the batch dim, which is sharded over the data
+    axis, so routing/scatter/expert buffers stay device-local — the §Perf
+    iteration for the MoE collective/memory terms.
+    """
+    b, s, d = x.shape
+    if grouped:
+        return jax.vmap(lambda xg: _dispatch_group(xg, p, cfg))(x)
+    return _dispatch_group(x.reshape(b * s, d), p, cfg).reshape(b, s, d)
+
+
+def moe_specs(cfg: ArchConfig, multi_pod: bool = False) -> Dict[str, Any]:
+    """Expert weights: EP over 'model' if divisible, else TP-in-expert."""
+    model_size_hint = 16
+    if cfg.n_experts % model_size_hint == 0:
+        wg = P("model", None, None)
+        wd = P("model", None, None)
+    else:
+        wg = P(None, None, "model")
+        wd = P(None, "model", None)
+    return {"router": P(None, None), "w_gate": wg, "w_up": wg, "w_down": wd}
+
+
+class MoeLM(DenseLM):
+    """DenseLM with the FFN swapped for the MoE dispatcher."""
+
+    def __init__(self, cfg: ArchConfig, remat_policy: str = "full",
+                 attn_impl: str = "ref", moe_grouped: bool = False):
+        super().__init__(cfg, remat_policy=remat_policy, attn_impl=attn_impl)
+        self.moe_grouped = moe_grouped
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_lm, k_layers = jax.random.split(key)
+
+        def one_layer(k):
+            ka, km = jax.random.split(k)
+            return {
+                "attn": L.init_attention(ka, cfg),
+                "moe": init_moe_mlp(km, cfg),
+                "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            }
+
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        return {"lm": L.init_lm(k_lm, cfg),
+                "layers": jax.vmap(one_layer)(layer_keys)}
+
+    def param_specs(self, multi_pod: bool = False) -> Dict[str, Any]:
+        cfg = self.cfg
+        sp = functools.partial(spec, multi_pod=multi_pod)
+        attn = {"wq": sp("embed", "heads"), "wk": sp("embed", "heads"),
+                "wv": sp("embed", "heads"), "wo": sp("heads", "embed")}
+        if cfg.qk_norm:
+            attn["q_norm"] = sp(None)
+            attn["k_norm"] = sp(None)
+        layer = {"attn": attn, "moe": moe_specs(cfg, multi_pod),
+                 "ln1": sp(None), "ln2": sp(None)}
+        layer = jax.tree.map(lambda s: P(*((None,) + tuple(s))), layer,
+                             is_leaf=lambda x: isinstance(x, P))
+        return {"lm": {"embed": sp("vocab", "embed"),
+                       "unembed": sp("embed", "vocab"),
+                       "final_norm": sp(None)},
+                "layers": layer}
+
+    def _layer_train(self, x, lp, pos):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + L.attention(lp["attn"], h, cfg, pos=pos,
+                            attn_impl=self.attn_impl)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + moe_mlp(lp["moe"], h, cfg, grouped=self.moe_grouped)
+
+    def forward_decode(self, params, cache, tokens, cur_pos):
+        cfg = self.cfg
+        x = params["lm"]["embed"][tokens]
+
+        def step(x, packed):
+            lp, ck, cv = packed
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, ck, cv = L.attention_decode(lp["attn"], h, ck, cv, cur_pos,
+                                           cfg, attn_impl=self.attn_impl)
+            x = x + a
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + moe_mlp(lp["moe"], h, cfg)
+            return x, (ck, cv)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            step, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.rmsnorm(x, params["lm"]["final_norm"], cfg.norm_eps)
+        return x @ params["lm"]["unembed"], {"k": new_k, "v": new_v}

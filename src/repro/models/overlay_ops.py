@@ -1,0 +1,65 @@
+"""Model pointwise datapaths routed through the paper's overlay JIT.
+
+Where the pointwise math is overlay-expressible (DSP ops: ±, ×, min/max,
+fused mul-add), we JIT it through the full pipeline once at import of the
+using model and execute its DFG in "compiled mode" (a jnp expression
+generated from the routed graph — semantically the configured overlay, see
+DESIGN.md §4).  Transcendentals (exp in silu/softmax) are not DSP-block ops,
+so gated-silu splits: sigmoid stays jnp, the gating product and polynomial
+parts run on the overlay DFG.
+
+The JIT'd kernels are cached process-wide; their CompiledKernel objects are
+inspectable (tests assert they really placed & routed).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit import CompiledKernel, jit_compile
+from repro.core.overlay import OverlaySpec
+
+_SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+_CACHE: Dict[str, CompiledKernel] = {}
+
+
+def _get(name: str, fn: Callable, n_inputs: int) -> CompiledKernel:
+    if name not in _CACHE:
+        _CACHE[name] = jit_compile(fn, _SPEC, n_inputs=n_inputs, name=name,
+                                   max_replicas=1, place_effort=0.25)
+    return _CACHE[name]
+
+
+def squared_relu(x):
+    """max(x,0)^2 — nemotron-4's activation; fully overlay-expressible."""
+    ck = _get("squared_relu", lambda a: a.max(0.0) * a.max(0.0), 1)
+    return ck(x)
+
+
+def gated_silu(g, u):
+    """silu(g) * u.  sigmoid is transcendental (host jnp); the two products
+    are the overlay datapath."""
+    s = jax.nn.sigmoid(g.astype(jnp.float32)).astype(g.dtype)
+    ck = _get("gate_mul2", lambda a, b, c: a * b * c, 3)
+    return ck(g, s, u)
+
+
+def ssm_gate(y, z):
+    """y * silu(z) for the Mamba2 output gate."""
+    s = jax.nn.sigmoid(z.astype(jnp.float32)).astype(z.dtype)
+    ck = _get("gate_mul2", lambda a, b, c: a * b * c, 3)
+    return ck(y, z, s)
+
+
+def residual_add(x, r):
+    ck = _get("residual_add", lambda a, b: a + b, 2)
+    return ck(x, r)
+
+
+def compiled_kernels() -> Dict[str, CompiledKernel]:
+    """Expose the JIT'd overlay kernels for inspection/benchmarks."""
+    return dict(_CACHE)

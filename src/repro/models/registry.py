@@ -1,0 +1,100 @@
+"""Model factory: ArchConfig → model object (family dispatch) and the
+input_specs() used by the dry-run (ShapeDtypeStruct stand-ins, no
+allocation)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from repro.models.mamba2 import MambaLM
+from repro.models.moe import MoeLM
+from repro.models.transformer import DenseLM
+from repro.models.whisper import EncDecLM
+from repro.models.zamba2 import HybridLM
+
+_FAMILY = {
+    "dense": DenseLM,
+    "vlm": DenseLM,        # InternLM2 backbone; ViT frontend is a stub
+    "moe": MoeLM,
+    "ssm": MambaLM,
+    "hybrid": HybridLM,
+    "audio": EncDecLM,
+}
+
+
+def build_model(cfg: ArchConfig, remat_policy: str = "full",
+                attn_impl: str = "ref", ssd_dtype: str = "f32",
+                moe_grouped: bool = False, parallel_block: bool = False):
+    """Family dispatch.  ssd_dtype/moe_grouped/parallel_block are the
+    §Perf hillclimb levers (ignored by families they don't apply to)."""
+    kw = dict(remat_policy=remat_policy, attn_impl=attn_impl)
+    if cfg.family in ("ssm", "hybrid"):
+        kw["ssd_dtype"] = jnp.bfloat16 if ssd_dtype == "bf16" \
+            else jnp.float32
+    if cfg.family == "moe":
+        kw["moe_grouped"] = moe_grouped
+    if cfg.family in ("dense", "vlm") and parallel_block:
+        kw["parallel_block"] = True
+    return _FAMILY[cfg.family](cfg, **kw)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    from repro.configs.registry import get_arch
+    return get_arch(arch_id)
+
+
+# -------------------------------------------------------------- input specs
+
+def input_specs(cfg: ArchConfig, seq: int, batch: int, kind: str,
+                multi_pod: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train/prefill: {tokens, labels [, input_embeds]} — full sequence.
+    decode: {tokens (B,1), cur_pos} — the KV/SSM cache is part of the step
+    state and speced by cache_specs/init_cache shapes.
+    """
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+        if cfg.frontend == "vision":
+            # stub ViT: 1/8 of the sequence arrives as patch embeddings
+            specs["input_embeds"] = jax.ShapeDtypeStruct(
+                (batch, max(1, seq // 8), cfg.d_model), jnp.float32)
+        if cfg.frontend == "audio":
+            # stub mel frontend: encoder sees seq frames; decoder seq//4
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((batch, max(8, seq // 4)), i32),
+                "labels": jax.ShapeDtypeStruct((batch, max(8, seq // 4)), i32),
+                "input_embeds": jax.ShapeDtypeStruct(
+                    (batch, seq, cfg.d_model), jnp.float32),
+            }
+        return specs
+    if kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, 1), i32),
+            "cur_pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(f"unknown kind {kind}")
+
+
+def input_shardings(cfg: ArchConfig, kind: str, multi_pod: bool = False,
+                    batch_size: Optional[int] = None) -> Dict[str, P]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    shards = 32 if multi_pod else 16
+    if batch_size is not None and batch_size % shards != 0:
+        batch = ()                    # thin batch (e.g. long_500k): replicate
+    bspec = P(batch if batch else None, None)
+    if kind in ("train", "prefill"):
+        sh = {"tokens": bspec, "labels": bspec}
+        if cfg.frontend is not None:
+            sh["input_embeds"] = P(batch if batch else None, None, None)
+        return sh
+    return {"tokens": bspec, "cur_pos": P()}

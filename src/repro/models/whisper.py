@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder backbone (whisper-large-v3).
+
+The conv/mel frontend is a STUB per the task statement: ``input_specs()``
+feeds precomputed frame embeddings (B, S_frames, d) straight into the
+encoder.  Encoder: non-causal self-attn stack.  Decoder: causal self-attn +
+cross-attn to the encoder output.  Decode caches: self-attn KV (grows) +
+cross-attn KV (computed once from the encoder memory).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.common import ArchConfig, spec
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, remat_policy: str = "full",
+                 attn_impl: str = "ref"):
+        self.cfg = cfg
+        self.remat_policy = remat_policy
+        self.attn_impl = attn_impl
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_lm, k_enc, k_dec = jax.random.split(key, 3)
+
+        def enc_layer(k):
+            ka, km = jax.random.split(k)
+            return {"attn": L.init_attention(ka, cfg),
+                    "mlp": L.init_mlp(km, cfg),
+                    "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                    "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+        def dec_layer(k):
+            ka, kx, km = jax.random.split(k, 3)
+            return {"attn": L.init_attention(ka, cfg),
+                    "xattn": L.init_attention(kx, cfg),
+                    "mlp": L.init_mlp(km, cfg),
+                    "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                    "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+                    "ln3": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+        return {
+            "lm": L.init_lm(k_lm, cfg),
+            "enc": jax.vmap(enc_layer)(jax.random.split(k_enc,
+                                                        cfg.enc_layers)),
+            "dec": jax.vmap(dec_layer)(jax.random.split(k_dec,
+                                                        cfg.n_layers)),
+        }
+
+    def param_specs(self, multi_pod: bool = False) -> Dict[str, Any]:
+        cfg = self.cfg
+        sp = functools.partial(spec, multi_pod=multi_pod)
+        attn = {"wq": sp("embed", "heads"), "wk": sp("embed", "heads"),
+                "wv": sp("embed", "heads"), "wo": sp("heads", "embed")}
+        mlp = {"w_gate": sp("embed", "ff"), "w_up": sp("embed", "ff"),
+               "w_down": sp("ff", "embed")} \
+            if cfg.activation == "swiglu" else \
+            {"w_up": sp("embed", "ff"), "w_down": sp("ff", "embed")}
+        enc = {"attn": dict(attn), "mlp": dict(mlp),
+               "ln1": sp(None), "ln2": sp(None)}
+        dec = {"attn": dict(attn), "xattn": dict(attn), "mlp": dict(mlp),
+               "ln1": sp(None), "ln2": sp(None), "ln3": sp(None)}
+        stack = lambda t: jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), t,
+            is_leaf=lambda x: isinstance(x, P))
+        return {"lm": {"embed": sp("vocab", "embed"),
+                       "unembed": sp("embed", "vocab"),
+                       "final_norm": sp(None)},
+                "enc": stack(enc), "dec": stack(dec)}
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d) stub-frontend embeddings → memory."""
+        cfg = self.cfg
+        pos = jnp.arange(frames.shape[1])
+
+        def body(x, lp):
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            x = x + L.attention(lp["attn"], h, cfg, pos=pos, causal=False,
+                                attn_impl=self.attn_impl)
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            return x + L.mlp(lp["mlp"], h, cfg)
+
+        if self.remat_policy != "none":
+            body = jax.checkpoint(body)
+
+        def step(x, lp):
+            return body(x, lp), None
+
+        x, _ = lax.scan(step, frames.astype(cfg.dtype), params["enc"])
+        return x
+
+    # ------------------------------------------------------------ decoder
+    def forward_train(self, params, tokens, input_embeds=None,
+                      last_only: bool = False):
+        """tokens: (B, S_dec); input_embeds: (B, S_enc, d) frames."""
+        cfg = self.cfg
+        memory = self.encode(params, input_embeds)
+        x = params["lm"]["embed"][tokens]
+        pos = jnp.arange(tokens.shape[1])
+
+        def body(x, lp):
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            x = x + L.attention(lp["attn"], h, cfg, pos=pos,
+                                attn_impl=self.attn_impl)
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.attention(lp["xattn"], h, cfg, pos=pos, memory=memory,
+                                attn_impl=self.attn_impl)
+            h = L.rmsnorm(x, lp["ln3"], cfg.norm_eps)
+            return x + L.mlp(lp["mlp"], h, cfg)
+
+        if self.remat_policy != "none":
+            body = jax.checkpoint(body)
+
+        def step(x, lp):
+            return body(x, lp), None
+
+        x, _ = lax.scan(step, x, params["dec"])
+        if last_only:
+            x = x[:, -1:]
+        x = L.rmsnorm(x, params["lm"]["final_norm"], cfg.norm_eps)
+        return x @ params["lm"]["unembed"]
+
+    def loss(self, params, batch):
+        logits = self.forward_train(params, batch["tokens"],
+                                    batch["input_embeds"])
+        return L.cross_entropy(logits, batch["labels"])
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, seq: int, dtype=None,
+                   enc_len: int = 1500) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = dtype or cfg.dtype
+        kv = (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.hd)
+        xkv = (cfg.n_layers, batch, cfg.n_kv_heads, enc_len, cfg.hd)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+
+    def cache_specs(self, multi_pod: bool = False, seq_sharded: bool = False,
+                    model_axis: int = 16) -> Dict[str, Any]:
+        batch = ("pod", "data") if multi_pod else "data"
+        if self.cfg.n_kv_heads % model_axis == 0:
+            s = P(None, batch, "model", None, None)
+            xs = s
+        else:
+            s = P(None, batch, None, "model", None)
+            # cross KV is 1500-frame (not divisible): shard batch only
+            xs = P(None, batch, None, None, None)
+        return {"k": s, "v": s, "xk": xs, "xv": xs}
+
+    def forward_decode(self, params, cache, tokens, cur_pos):
+        """One decoder token against self-KV cache + fixed cross KV."""
+        cfg = self.cfg
+        x = params["lm"]["embed"][tokens]
+
+        def step(x, packed):
+            lp, ck, cv, xk, xv = packed
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, ck, cv = L.attention_decode(lp["attn"], h, ck, cv, cur_pos,
+                                           cfg, attn_impl=self.attn_impl)
+            x = x + a
+            # cross-attention against the precomputed encoder KV
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = h @ lp["xattn"]["wq"]
+            b = q.shape[0]
+            q = q.reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
+            from repro.kernels.flash_attention import ref as fa_ref
+            o = fa_ref.attention(q, xk, xv, causal=False)
+            o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+            x = x + o @ lp["xattn"]["wo"]
+            h = L.rmsnorm(x, lp["ln3"], cfg.norm_eps)
+            x = x + L.mlp(lp["mlp"], h, cfg)
+            return x, (ck, cv)
+
+        x, (ck, cv) = lax.scan(
+            step, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = L.rmsnorm(x, params["lm"]["final_norm"], cfg.norm_eps)
+        return x @ params["lm"]["unembed"], {
+            "k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,175 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single SHARED attention
+block invoked every ``attn_every`` layers (weights shared across invocation
+sites, per-site KV caches — the Zamba2 trick that buys attention quality at
+a fraction of the parameter cost).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.common import ArchConfig, spec
+from repro.models.mamba2 import (MambaLM, init_mamba_block, mamba_block,
+                                 mamba_specs, ssm_dims)
+
+
+class HybridLM(MambaLM):
+    @property
+    def n_attn_sites(self) -> int:
+        cfg = self.cfg
+        return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_lm, k_layers, k_shared = jax.random.split(key, 3)
+
+        def one_layer(k):
+            return {"mamba": init_mamba_block(k, cfg),
+                    "ln": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        ka, km = jax.random.split(k_shared)
+        shared = {
+            "attn": L.init_attention(ka, cfg),
+            "mlp": L.init_mlp(km, cfg),
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+        return {"lm": L.init_lm(k_lm, cfg),
+                "layers": jax.vmap(one_layer)(layer_keys),
+                "shared": shared}
+
+    def param_specs(self, multi_pod: bool = False) -> Dict[str, Any]:
+        base = super().param_specs(multi_pod)
+        sp = functools.partial(spec, multi_pod=multi_pod)
+        attn = {"wq": sp("embed", "heads"), "wk": sp("embed", "heads"),
+                "wv": sp("embed", "heads"), "wo": sp("heads", "embed")}
+        if self.cfg.qk_norm:
+            attn["q_norm"] = sp(None)
+            attn["k_norm"] = sp(None)
+        mlp = {"w_gate": sp("embed", "ff"), "w_up": sp("embed", "ff"),
+               "w_down": sp("ff", "embed")} \
+            if self.cfg.activation == "swiglu" else \
+            {"w_up": sp("embed", "ff"), "w_down": sp("ff", "embed")}
+        base["shared"] = {"attn": attn, "mlp": mlp,
+                          "ln1": sp(None), "ln2": sp(None)}
+        return base
+
+    # ------------------------------------------------------------ training
+    def _shared_block(self, sp_, x, pos):
+        cfg = self.cfg
+        h = L.rmsnorm(x, sp_["ln1"], cfg.norm_eps)
+        x = x + L.attention(sp_["attn"], h, cfg, pos=pos,
+                            attn_impl=self.attn_impl)
+        h = L.rmsnorm(x, sp_["ln2"], cfg.norm_eps)
+        return x + L.mlp(sp_["mlp"], h, cfg)
+
+    def forward_train(self, params, tokens,
+                      input_embeds: Optional[Any] = None,
+                      last_only: bool = False):
+        cfg = self.cfg
+        x = params["lm"]["embed"][tokens]
+        pos = jnp.arange(tokens.shape[1])
+        shared = params["shared"]
+
+        def body(x, lp, i):
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            x = x + mamba_block(lp["mamba"], h, cfg,
+                                ssd_dtype=self.ssd_dtype)
+            return lax.cond(i % cfg.attn_every == 0,
+                            lambda v: self._shared_block(shared, v, pos),
+                            lambda v: v, x)
+
+        if self.remat_policy == "full":
+            body = jax.checkpoint(body)
+        elif self.remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+        def step(x, inp):
+            lp, i = inp
+            return body(x, lp, i), None
+
+        idx = jnp.arange(cfg.n_layers)
+        x, _ = lax.scan(step, x, (params["layers"], idx))
+        if last_only:
+            x = x[:, -1:]
+        x = L.rmsnorm(x, params["lm"]["final_norm"], cfg.norm_eps)
+        return x @ params["lm"]["unembed"]
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, seq: int, dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        base = super().init_cache(batch, seq, dtype)
+        dt = dtype or cfg.dtype
+        kv = (self.n_attn_sites, batch, cfg.n_kv_heads, seq, cfg.hd)
+        base["attn_k"] = jnp.zeros(kv, dt)
+        base["attn_v"] = jnp.zeros(kv, dt)
+        return base
+
+    def cache_specs(self, multi_pod: bool = False, seq_sharded: bool = False,
+                    model_axis: int = 16) -> Dict[str, Any]:
+        base = super().cache_specs(multi_pod, seq_sharded, model_axis)
+        batch = ("pod", "data") if multi_pod else "data"
+        heads_ok = self.cfg.n_kv_heads % model_axis == 0
+        if seq_sharded:
+            s = P(None, None, "model", "data", None) if heads_ok else \
+                P(None, None, None,
+                  ("pod", "data", "model") if multi_pod
+                  else ("data", "model"), None)
+        elif heads_ok:
+            s = P(None, batch, "model", None, None)
+        else:
+            s = P(None, batch, None, "model", None)
+        base["attn_k"] = s
+        base["attn_v"] = s
+        return base
+
+    def forward_decode(self, params, cache, tokens, cur_pos):
+        cfg = self.cfg
+        x = params["lm"]["embed"][tokens]
+        shared = params["shared"]
+
+        def step(carry, packed):
+            x, ak, av = carry
+            lp, conv, state, i = packed
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            o, conv, state = mamba_block(lp["mamba"], h, cfg,
+                                         conv_state=conv, ssm_state=state,
+                                         decode=True)
+            x = x + o
+
+            def with_attn(operand):
+                x, ak, av = operand
+                site = i // cfg.attn_every
+                ck = lax.dynamic_index_in_dim(ak, site, 0, keepdims=False)
+                cv = lax.dynamic_index_in_dim(av, site, 0, keepdims=False)
+                h = L.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+                a, ck, cv = L.attention_decode(shared["attn"], h, ck, cv,
+                                               cur_pos, cfg,
+                                               attn_impl=self.attn_impl)
+                x = x + a
+                h = L.rmsnorm(x, shared["ln2"], cfg.norm_eps)
+                x = x + L.mlp(shared["mlp"], h, cfg)
+                ak = lax.dynamic_update_index_in_dim(ak, ck, site, 0)
+                av = lax.dynamic_update_index_in_dim(av, cv, site, 0)
+                return x, ak, av
+
+            x, ak, av = lax.cond(i % cfg.attn_every == 0, with_attn,
+                                 lambda op: op, (x, ak, av))
+            return (x, ak, av), (conv, state)
+
+        idx = jnp.arange(cfg.n_layers)
+        (x, ak, av), (conv, state) = lax.scan(
+            step, (x, cache["attn_k"], cache["attn_v"]),
+            (params["layers"], cache["conv"], cache["state"], idx))
+        x = L.rmsnorm(x, params["lm"]["final_norm"], cfg.norm_eps)
+        return x @ params["lm"]["unembed"], {
+            "conv": conv, "state": state, "attn_k": ak, "attn_v": av}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa
+                               clip_by_global_norm, lr_schedule)
+from repro.optim.compression import (compress_pytree, decompress_pytree,  # noqa
+                                     error_feedback_allreduce)

@@ -1,0 +1,1 @@
+from repro.parallel.pipeline import make_pipeline_train_step  # noqa: F401

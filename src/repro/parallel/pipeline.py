@@ -1,0 +1,94 @@
+"""Optional pipeline parallelism over the 'pod' axis (GPipe-style microbatch
+schedule via shard_map + collective_permute).
+
+At 512 chips the default layout is DP×TP (DESIGN.md §6); this module exists
+for deeper meshes (1000+ nodes) where a third parallelism dimension pays.
+The model's layer stack is split into ``n_stages`` contiguous groups; each
+pod holds one stage's parameters; activations flow stage→stage with
+collective_permute; microbatches keep every stage busy (bubble fraction
+(S-1)/(M+S-1)).
+
+Loss-only forward pipeline (the inference/evaluation case) — the backward
+pipeline composes with jax.grad through shard_map, exercised in
+tests/test_pipeline.py on a host mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def make_pipeline_train_step(layer_fn: Callable, n_stages: int,
+                             n_micro: int, mesh,
+                             stage_axis: str = "data") -> Callable:
+    """Build a pipelined forward over stage-sharded stacked layer params.
+
+    layer_fn(carry, layer_params) -> carry: one layer applied to a
+    microbatch activation carry of shape (mb, ...).
+
+    Inputs to the returned fn:
+      stage_params: pytree with leading dim (n_stages, layers_per_stage, …)
+                    sharded P(stage_axis) on the leading dim
+      x:            (n_micro, mb, ...) microbatched activations, replicated
+    Output: (n_micro, mb, ...) pipeline output (replicated).
+    """
+    axis = stage_axis
+
+    def stage_body(stage_params, x):
+        """Runs on every stage member; x: (n_micro, mb, ...) local copy."""
+        # shard_map keeps the sharded leading dim at local size 1 — squeeze
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)
+        sid = lax.axis_index(axis)
+        n_steps = n_micro + n_stages - 1
+        mb_shape = x.shape[1:]
+
+        def apply_stage(act):
+            def body(c, lp):
+                return layer_fn(c, lp), None
+            out, _ = lax.scan(body, act, stage_params)
+            return out
+
+        def step(carry, t):
+            outputs, inflight = carry
+            # which microbatch enters stage 0 at step t
+            feed = jnp.where((sid == 0) & (t < n_micro),
+                             x[jnp.minimum(t, n_micro - 1)],
+                             inflight)
+            out = apply_stage(feed)
+            # pass activations down the ring; last stage's output recorded
+            nxt = lax.ppermute(out, axis,
+                               [(i, (i + 1) % n_stages)
+                                for i in range(n_stages)])
+            done_idx = t - (n_stages - 1)
+            is_done = (sid == n_stages - 1) & (done_idx >= 0) & \
+                (done_idx < n_micro)
+            outputs = lax.cond(
+                is_done,
+                lambda o: o.at[jnp.clip(done_idx, 0, n_micro - 1)].set(out),
+                lambda o: o, outputs)
+            return (outputs, nxt), None
+
+        outputs0 = jnp.zeros((n_micro,) + mb_shape, x.dtype)
+        inflight0 = jnp.zeros(mb_shape, x.dtype)
+        (outputs, _), _ = lax.scan(step, (outputs0, inflight0),
+                                   jnp.arange(n_steps))
+        # broadcast final outputs from the last stage to all members
+        mask = (sid == n_stages - 1).astype(outputs.dtype)
+        return lax.psum(outputs * mask, axis)
+
+    p_spec = jax.tree.map(lambda _: P(axis), {"_": 0})
+
+    def run(stage_params, x):
+        sp = jax.tree.map(lambda _: P(axis), stage_params)
+        fn = shard_map(stage_body, mesh=mesh,
+                       in_specs=(sp, P()), out_specs=P(),
+                       check_rep=False)
+        return fn(stage_params, x)
+
+    return jax.jit(run)

@@ -1,0 +1,2 @@
+from repro.train.step import make_serve_step, make_train_step  # noqa: F401
+from repro.train.loop import TrainLoop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,69 @@
+"""Data-parallel training with int8 error-feedback gradient compression.
+
+``make_compressed_dp_train_step`` builds a shard_map-based step for the pure
+data-parallel regime (params replicated, batch sharded over 'data'): each
+member computes local grads, quantises them to int8 with error feedback
+(state carried in the train state), and the reduction payload is 4× smaller
+than bf16 all-reduce — the roofline collective term for the DP axis drops
+accordingly (DESIGN.md §7).
+
+This is the distributed-optimization feature in its exercised form: the
+integration test trains a small model and checks convergence parity with
+the uncompressed step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import error_feedback_allreduce
+
+
+def init_compressed_state(model, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params),
+            "ef": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                               params)}
+
+
+def make_compressed_dp_train_step(model, opt_cfg: AdamWConfig, mesh
+                                  ) -> Callable:
+    """Pure-DP compressed step over mesh axis 'data'.
+
+    state: {params (replicated), opt (replicated), ef (replicated — each
+    member's error-feedback is identical given identical grads per member
+    ordering; carried explicitly)}.
+    """
+
+    def local_step(state, batch):
+        # inside shard_map: batch is the LOCAL shard; params replicated
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        loss = jax.lax.pmean(loss, "data")
+        grads, new_ef = error_feedback_allreduce(grads, state["ef"], "data")
+        params, opt, metrics = adamw_update(opt_cfg, state["params"], grads,
+                                            state["opt"])
+        metrics = {**metrics, "loss": loss}
+        return {"params": params, "opt": opt, "ef": new_ef}, metrics
+
+    def step(state, batch):
+        st_specs = jax.tree.map(lambda _: P(), state)
+        b_specs = jax.tree.map(lambda _: P("data", None), batch)
+        out_specs = (jax.tree.map(lambda _: P(), state),
+                     {"loss": P(), "lr": P(), "grad_norm": P(),
+                      "step": P()})
+        fn = shard_map(local_step, mesh=mesh,
+                       in_specs=(st_specs, b_specs),
+                       out_specs=out_specs, check_rep=False)
+        return fn(state, batch)
+
+    return jax.jit(step)

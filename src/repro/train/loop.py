@@ -1,0 +1,109 @@
+"""Production train loop: checkpoint/restart, straggler watchdog, elastic
+re-planning hooks, host-prefetched data.
+
+The loop is deliberately host-side simple — all heavy lifting is in the
+jitted train_step — and is exercised end-to-end on CPU by the examples and
+integration tests (small models, few steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.replicate import plan_cluster
+from repro.data.pipeline import SyntheticTokens, make_batch_iterator
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    # straggler watchdog: a step slower than ema * threshold is an event
+    straggler_threshold: float = 3.0
+    straggler_ema: float = 0.9
+    # elastic: callback invoked on straggler/failure events
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+
+class TrainLoop:
+    def __init__(self, train_step, state, dataset: SyntheticTokens,
+                 cfg: TrainLoopConfig,
+                 extra_batch: Optional[Dict[str, Any]] = None):
+        self.train_step = train_step
+        self.state = state
+        self.dataset = dataset
+        self.cfg = cfg
+        self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
+                     if cfg.checkpoint_dir else None)
+        self.start_step = 0
+        self.metrics_log: List[Dict[str, float]] = []
+        self.straggler_events: List[Dict[str, float]] = []
+        self._extra = extra_batch
+
+    # ------------------------------------------------------------- restart
+    def try_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        res = self.ckpt.restore_latest(self.state)
+        if res is None:
+            return False
+        step, self.state = res
+        self.start_step = step
+        return True
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        it = make_batch_iterator(self.dataset, start_step=self.start_step,
+                                 extra=self._extra)
+        ema = None
+        step = self.start_step
+        try:
+            while step < cfg.total_steps:
+                step, batch = next(it)
+                if step >= cfg.total_steps:
+                    break
+                t0 = time.perf_counter()
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+
+                # straggler watchdog (step-time EMA)
+                if ema is not None and dt > cfg.straggler_threshold * ema:
+                    ev = {"step": step, "dt": dt, "ema": ema}
+                    self.straggler_events.append(ev)
+                    if cfg.on_straggler:
+                        cfg.on_straggler(step, dt, ema)
+                ema = dt if ema is None else \
+                    cfg.straggler_ema * ema + (1 - cfg.straggler_ema) * dt
+
+                if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                    self.metrics_log.append(
+                        {"step": step,
+                         "loss": float(metrics["loss"]),
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "dt_s": dt})
+                if self.ckpt and step > 0 and \
+                        step % cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, self.state)
+                step += 1
+        finally:
+            it.close()
+            if self.ckpt:
+                self.ckpt.save(step, self.state, blocking=True)
+        return {"final_step": step, "metrics": self.metrics_log,
+                "stragglers": self.straggler_events}
+
+
+def replan_after_failure(n_alive: int, model_shards: int):
+    """Elastic hook: derive the new mesh from the surviving device count —
+    the paper's resource-aware replication applied at cluster scale."""
+    return plan_cluster(n_alive, model_shards)

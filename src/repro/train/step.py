@@ -1,0 +1,93 @@
+"""train_step / serve_step builders: the jittable units the launcher (and
+the dry-run) lower onto the mesh."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1) -> Callable:
+    """(state, batch) → (state, metrics); state = {params, opt}.
+
+    grad_accum > 1: the global batch is split into ``grad_accum``
+    microbatches scanned sequentially with bf16 gradient accumulation —
+    peak activation memory divides by ``grad_accum`` while collective bytes
+    per token are unchanged (the memory-feasibility lever for the biggest
+    train cells; §Perf iteration A3)."""
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(model.loss)(
+                state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            params = state["params"]
+
+            def accum(carry, mb):
+                loss_sum, g_sum = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(a.dtype), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            (loss, grads), _ = jax.lax.scan(accum, (0.0, g0), micro)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        params, opt, metrics = adamw_update(opt_cfg, state["params"], grads,
+                                            state["opt"])
+        metrics = {**metrics, "loss": loss}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    """Forward-only full-sequence step (inference prefill): returns logits
+    of the last position (next-token) — the unit the prefill_32k cells
+    lower."""
+
+    def prefill_step(params, batch):
+        # last_only: the (B, S, V) logits tensor is never materialised —
+        # only the final position is unembedded (§Perf iteration B1)
+        logits = model.forward_train(params, batch["tokens"],
+                                     batch.get("input_embeds"),
+                                     last_only=True)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    """(params, cache, tokens, cur_pos) → (next_logits, cache)."""
+
+    def serve_step(params, cache, tokens, cur_pos):
+        logits, cache = model.forward_decode(params, cache, tokens, cur_pos)
+        return logits[:, -1], cache
+
+    return serve_step
+
+
+def init_state(model, key, opt: bool = True) -> Dict[str, Any]:
+    params = model.init(key)
+    if not opt:
+        return {"params": params}
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def state_specs(model, multi_pod: bool = False) -> Dict[str, Any]:
+    ps = model.param_specs(multi_pod)
+    return {"params": ps,
+            "opt": {"mu": ps, "nu": ps, "step": P()}}

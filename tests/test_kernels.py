@@ -1,0 +1,89 @@
+"""Pallas flash-attention & RMSNorm vs their jnp oracles: shape/dtype
+sweeps (GQA ratios, causal, sliding window, decode alignment)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.rmsnorm import ref as rn_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm as rn_pallas
+
+
+def _qkv(b, hq, hkv, sq, skv, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_gqa(hq, hkv, dtype):
+    q, k, v = _qkv(2, hq, hkv, 256, 256, 64, dtype)
+    want = fa_ref.attention(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("sq,skv", [(128, 128), (128, 512), (256, 256)])
+def test_flash_attention_shapes(sq, skv):
+    q, k, v = _qkv(1, 4, 2, sq, skv, 64, jnp.float32)
+    want = fa_ref.attention(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_non_causal():
+    q, k, v = _qkv(2, 4, 4, 128, 128, 32, jnp.float32)
+    want = fa_ref.attention(q, k, v, causal=False)
+    got = flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(1, 4, 2, 256, 256, 64, jnp.float32)
+    want = fa_ref.attention(q, k, v, causal=True, window=window)
+    got = flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_blocks():
+    q, k, v = _qkv(1, 2, 2, 512, 512, 64, jnp.float32)
+    a = flash_attention(q, k, v, bq=128, bk=128)
+    b = flash_attention(q, k, v, bq=256, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 3, 128), (1, 257, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, shape, dtype)
+    w = jax.random.normal(k2, (shape[-1],), dtype) * 0.1 + 1.0
+    want = rn_ref.rmsnorm(x, w)
+    got = rn_pallas(x, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_unit_invariance():
+    """RMSNorm output has unit RMS when weight=1."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 128), jnp.float32) * 5
+    w = jnp.ones((128,))
+    y = np.asarray(rn_pallas(x, w))
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

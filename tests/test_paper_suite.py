@@ -1,0 +1,96 @@
+"""End-to-end compilation + execution of the paper's six OpenCL benchmarks
+(§IV), through both execution paths, checked against numpy oracles, plus the
+paper's headline comparisons in miniature."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.jit import jit_compile
+from repro.core.overlay import OverlaySpec
+from repro.core.runtime import Buffer, Context, Device, Platform
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_benchmark_compiles_and_runs(name):
+    src, paper_replicas, oracle = BENCHMARKS[name]
+    ck = jit_compile(src, SPEC)
+    n_in = len(ck.dfg.inputs)
+    rng = np.random.default_rng(0)
+    xs = [rng.uniform(-1, 1, 500).astype(np.float32) for _ in range(n_in)]
+    want = oracle(*xs)
+    got = ck.run_reference(*xs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    got_p = ck.run_overlay(*xs)
+    np.testing.assert_allclose(got_p, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_replication_fills_overlay(name):
+    src, _, _ = BENCHMARKS[name]
+    ck = jit_compile(src, SPEC)
+    assert ck.plan.replicas >= 1
+    # another replica must NOT fit (maximality), on the binding resource
+    fug = ck.fug
+    if ck.plan.limited_by == "fu":
+        assert (ck.plan.replicas + 1) * fug.n_fus > SPEC.n_fus
+    elif ck.plan.limited_by == "io":
+        assert (ck.plan.replicas + 1) * fug.n_io > SPEC.n_io
+
+
+def test_par_speedup_vs_xla_recompile():
+    """Paper Fig. 7 analogue in miniature: overlay P&R is much faster than a
+    full XLA compile of the same kernel."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    src, _, oracle = BENCHMARKS["chebyshev"]
+    ck = jit_compile(src, SPEC)
+    overlay_ms = ck.par_time_ms
+
+    def f(x):
+        return x * (x * (16 * x * x - 20) * x + 5)
+
+    t0 = time.perf_counter()
+    jax.jit(f).lower(jnp.zeros((4096,), jnp.float32)).compile()
+    xla_ms = (time.perf_counter() - t0) * 1e3
+    # the claim tested here is structural (both paths work and are timed);
+    # the magnitude comparison is reported by benchmarks/par_time.py
+    assert overlay_ms > 0 and xla_ms > 0
+
+
+def test_runtime_api_end_to_end():
+    plat = Platform([Device("dev0", SPEC)])
+    ctx = Context(plat.devices[0])
+    prog = ctx.build_program(BENCHMARKS["poly1"][0])
+    assert prog.configure_overlay() < 1000  # µs, config is tiny
+    kern = prog.create_kernel()
+    x = np.linspace(-2, 2, 300).astype(np.float32)
+    (out,) = kern.set_args(Buffer(x)).enqueue()
+    np.testing.assert_allclose(out.read(), ((3 * x + 5) * x - 7) * x + 9,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_resource_aware_rebuild_after_reservation():
+    """Fig. 5: 'other logic' shrinks the exposed overlay; the compiler picks
+    a smaller replication factor for the same source."""
+    ctx = Context(Device("dev0", SPEC))
+    full = ctx.build_program(BENCHMARKS["chebyshev"][0])
+    r_full = full.compiled.plan.replicas
+    ctx.reserve(fus=SPEC.n_fus - full.compiled.fug.n_fus * 2, io=0)
+    small = ctx.build_program(BENCHMARKS["chebyshev"][0])
+    r_small = small.compiled.plan.replicas
+    assert r_small < r_full
+    assert r_small >= 1
+
+
+def test_config_size_scales_with_overlay_not_kernel():
+    """The paper's config-size claim: bytes scale with the overlay geometry
+    (and routed nets), staying orders below FPGA bitstream size (~4 MB)."""
+    for name in ("poly1", "chebyshev"):
+        ck = jit_compile(BENCHMARKS[name][0], SPEC)
+        assert ck.bitstream.n_bytes < 20_000
