@@ -1,0 +1,88 @@
+"""Multi-tenant serving on a two-overlay fleet — the ROADMAP's "high-traffic
+runtime" in miniature.
+
+Several tenants submit kernels from the paper's benchmark suite.  The
+Scheduler places each build on the device with the most free fabric (shedding
+replicas from resident programs when the fleet is full), a fleet-wide JIT
+cache makes repeat compilations free, and per-tenant out-of-order command
+queues batch kernels against the overlays with modelled config/exec time.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.cache import JITCache
+from repro.core.overlay import OverlaySpec
+from repro.core.runtime import Buffer, Device, Scheduler
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+
+# tenant -> stream of kernel requests (name, work items)
+TENANTS = {
+    "tenant-a": ["poly1", "poly1", "chebyshev", "poly1"],
+    "tenant-b": ["sgfilter", "sgfilter", "poly2"],
+    "tenant-c": ["chebyshev", "mibench", "chebyshev", "qspline"],
+}
+
+
+def main() -> None:
+    cache = JITCache(capacity=32)
+    sched = Scheduler([Device("ovl0", SPEC), Device("ovl1", SPEC)],
+                      cache=cache)
+    rng = np.random.default_rng(0)
+
+    queues = {name: ctx.create_queue(in_order=False)
+              for name, ctx in sched.contexts.items()}
+    programs = {}
+    events = []
+
+    for tenant, stream in TENANTS.items():
+        for kname in stream:
+            if kname not in programs:
+                prog = sched.build(BENCHMARKS[kname][0], max_replicas=6)
+                programs[kname] = prog
+                print(f"[{tenant}] built {kname} on "
+                      f"{prog.ctx.device.name} in {prog.build_ms:7.2f} ms "
+                      f"({prog.compiled.plan.replicas} replicas)")
+            prog = programs[kname]
+            n_in = len(prog.compiled.dfg.inputs)
+            bufs = [Buffer(rng.uniform(-1, 1, 2048).astype(np.float32))
+                    for _ in range(n_in)]
+            ev = queues[prog.ctx.device.name].enqueue_kernel(
+                prog.create_kernel().set_args(*bufs))
+            events.append((tenant, kname, ev))
+
+    print("\nper-request modelled latency:")
+    for tenant, kname, ev in events:
+        print(f"  {tenant} {kname:<10} queue {ev.queue_delay_us:7.1f} us | "
+              f"config {ev.config_us:5.1f} us | exec {ev.exec_us:6.2f} us")
+
+    print("\nfleet ledger:")
+    for dev, row in sched.ledger().items():
+        print(f"  {dev}: {row}")
+    assert sched.ledger_consistent(), "resource ledger out of balance"
+
+    total = len(events)
+    makespan = max(q.makespan_us for q in queues.values())
+    print(f"\nserved {total} kernels, fleet makespan {makespan:.0f} us "
+          f"-> {total / (makespan * 1e-6):.0f} kernels/s modelled")
+
+    # tenant churn: everyone disconnects, then poly1 is requested again at
+    # the same (now empty) fleet state — the fleet-wide cache returns the
+    # compiled artifact without running a single compiler stage
+    for prog in programs.values():
+        prog.release()
+    t0 = time.perf_counter()
+    sched.build(BENCHMARKS["poly1"][0], max_replicas=6)
+    print(f"after churn: poly1 re-served in "
+          f"{(time.perf_counter() - t0) * 1e3:.3f} ms (cache hit)")
+    print(f"JIT cache: {cache.stats.as_dict()}")
+    assert cache.stats.hits >= 1
+
+
+if __name__ == "__main__":
+    main()

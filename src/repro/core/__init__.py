@@ -1,3 +1,7 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+from repro.core.cache import JITCache, make_cache_key  # noqa: F401
+from repro.core.jit import CompiledKernel, jit_compile  # noqa: F401
+from repro.core.overlay import OverlaySpec  # noqa: F401

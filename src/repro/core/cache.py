@@ -1,0 +1,179 @@
+"""JIT compile cache — the artifact store that makes run-time compilation
+*cheap enough to sit on the serving path*.
+
+The paper's pitch is that overlay JIT compilation is fast (seconds, not the
+hours of a full FPGA flow); a serving runtime goes one step further and makes
+the *second* compilation of the same kernel free.  Entries are keyed on a
+content hash of everything that can change the produced configuration:
+
+  * the kernel itself — a canonical fingerprint of its DFG (``jit_compile``
+    lowers OpenCL-C text and python callables to a DFG before keying, so
+    every entry point keys the same kernel identically; two lambdas with
+    identical code but different closure constants hash differently — the
+    constants surface as DFG immediates);
+  * the :class:`~repro.core.overlay.OverlaySpec` (all geometry/FU fields);
+  * the **free-resource snapshot** (free FUs, free IO) the build compiles
+    against — a build made when the overlay was empty must not be reused when
+    half the fabric is occupied, because the replication factor would be
+    stale;
+  * the replication knobs (``max_replicas``, ``seed``, ``place_effort``).
+
+Eviction is LRU with a configurable capacity; hit/miss/eviction counters feed
+the serving dashboards (``benchmarks/jit_cache_perf.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Iterable, Optional, Tuple, Union
+
+from repro.core.dfg import DFG
+from repro.core.overlay import OverlaySpec
+
+CacheKey = str
+
+
+# ------------------------------------------------------------- fingerprints
+
+def dfg_fingerprint(g: DFG) -> str:
+    """Canonical content hash of a DFG: stable under node renumbering.
+
+    Nodes are visited in topological order and renumbered densely; each
+    contributes (op, renumbered args, imm).  Input/output order is part of
+    the fingerprint (it is part of the kernel ABI); node *names* are not.
+    """
+    renum = {}
+    parts = []
+    for n in g.toposort():
+        renum[n.nid] = len(renum)
+        args = ",".join(str(renum[a]) for a in n.args)
+        imm = "" if n.imm is None else repr(float(n.imm))
+        parts.append(f"{n.op}({args};{imm})")
+    sig = "|".join(parts)
+    io = (",".join(str(renum[i]) for i in g.inputs) + ">" +
+          ",".join(str(renum[o]) for o in g.outputs))
+    return hashlib.sha256(f"{sig}#{io}".encode()).hexdigest()
+
+
+def spec_fingerprint(spec: OverlaySpec) -> str:
+    return hashlib.sha256(repr(dataclasses.astuple(spec)).encode()).hexdigest()
+
+
+def kernel_fingerprint(kernel: Union[str, Callable, DFG],
+                       n_inputs: Optional[int] = None,
+                       name: Optional[str] = None) -> str:
+    """Content hash of the kernel alone (no overlay / resource context)."""
+    if isinstance(kernel, str):
+        return "src:" + hashlib.sha256(kernel.encode()).hexdigest()
+    if isinstance(kernel, DFG):
+        return "dfg:" + dfg_fingerprint(kernel)
+    # Python callable: trace it so closure constants land in the hash as DFG
+    # immediates.  Hashing code bytes would wrongly share entries between
+    # closures over different constants.
+    from repro.core.dfg import trace
+    from repro.core.ir import _lower_consts
+    if n_inputs is None:
+        raise ValueError("n_inputs required to fingerprint a python kernel")
+    return "fn:" + dfg_fingerprint(_lower_consts(trace(kernel, n_inputs,
+                                                       name)))
+
+
+def make_cache_key(kernel: Union[str, Callable, DFG],
+                   spec: OverlaySpec,
+                   free_fus: int,
+                   free_io: int,
+                   n_inputs: Optional[int] = None,
+                   name: Optional[str] = None,
+                   max_replicas: Optional[int] = None,
+                   seed: int = 0,
+                   place_effort: float = 1.0) -> CacheKey:
+    """The full key: kernel content × overlay × free-resource snapshot ×
+    replication knobs."""
+    kf = kernel_fingerprint(kernel, n_inputs=n_inputs, name=name)
+    ctx = (f"{spec_fingerprint(spec)}:{free_fus}:{free_io}:"
+           f"{max_replicas}:{seed}:{place_effort:g}")
+    return f"{kf}@{hashlib.sha256(ctx.encode()).hexdigest()[:16]}"
+
+
+# -------------------------------------------------------------------- cache
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    # misses whose compile then failed to place/route (e.g. scheduler
+    # placement probes on a full device) — without this the dashboard
+    # hit_rate under-reads real cache behaviour
+    build_failures: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    insertions=self.insertions, evictions=self.evictions,
+                    build_failures=self.build_failures,
+                    hit_rate=round(self.hit_rate, 4))
+
+
+class JITCache:
+    """LRU cache of built :class:`~repro.core.jit.CompiledKernel` objects.
+
+    Shared safely between any number of Contexts/Schedulers: entries are
+    immutable compile artifacts, and resource accounting happens in the
+    runtime ledger, never in the cache.
+    """
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- protocol
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._entries
+
+    def keys(self) -> Iterable[CacheKey]:
+        """Keys in LRU order (least recently used first)."""
+        return tuple(self._entries.keys())
+
+    # -------------------------------------------------------------- lookups
+    def get(self, key: CacheKey):
+        """Return the cached CompiledKernel or None; counts hit/miss and
+        refreshes recency on hit."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry
+
+    def put(self, key: CacheKey, ck) -> None:
+        self._entries[key] = ck
+        self._entries.move_to_end(key)
+        self.stats.insertions += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __repr__(self) -> str:
+        return (f"JITCache({len(self)}/{self.capacity} entries, "
+                f"{self.stats.hits} hits / {self.stats.misses} misses)")

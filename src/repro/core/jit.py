@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import dfg as dfg_mod
 from repro.core.bitstream import Bitstream, generate
+from repro.core.cache import JITCache, make_cache_key
 from repro.core.dfg import DFG, optimize, trace
 from repro.core.fuse import FUGraph, to_fu_graph
 from repro.core.ir import compile_opencl_to_dfg, _lower_consts
@@ -96,15 +97,28 @@ def _unpack(outs: List[Any]):
     return outs[0] if len(outs) == 1 else tuple(outs)
 
 
-def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
-              name: Optional[str]) -> DFG:
+def lower_to_dfg(kernel: Union[str, Callable, DFG],
+                 n_inputs: Optional[int] = None,
+                 name: Optional[str] = None,
+                 parse_source: bool = False) -> Union[str, DFG]:
+    """Lower a callable (and, with ``parse_source``, OpenCL-C text) to a DFG
+    so repeated compile probes / cache keying don't re-trace or re-parse.
+    DFGs pass through; str passes through unless ``parse_source``."""
     if isinstance(kernel, DFG):
-        return optimize(_lower_consts(kernel))
+        return kernel
     if isinstance(kernel, str):
-        return compile_opencl_to_dfg(kernel)
+        return compile_opencl_to_dfg(kernel) if parse_source else kernel
     if n_inputs is None:
         raise ValueError("n_inputs required when tracing a python kernel")
-    return optimize(_lower_consts(trace(kernel, n_inputs, name)))
+    return _lower_consts(trace(kernel, n_inputs, name))
+
+
+def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
+              name: Optional[str]) -> DFG:
+    if isinstance(kernel, str):
+        return compile_opencl_to_dfg(kernel)   # parses + optimizes
+    g = lower_to_dfg(kernel, n_inputs, name)
+    return optimize(_lower_consts(g))
 
 
 def jit_compile(kernel: Union[str, Callable, DFG],
@@ -115,9 +129,32 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                 fu_headroom: int = 0,
                 io_headroom: int = 0,
                 seed: int = 0,
-                place_effort: float = 1.0) -> CompiledKernel:
+                place_effort: float = 1.0,
+                cache: Optional["JITCache"] = None) -> CompiledKernel:
     """Full JIT pipeline. Raises PlacementError/RoutingError/LatencyError on
-    genuine mapping failures (kernel too big for the exposed overlay)."""
+    genuine mapping failures (kernel too big for the exposed overlay).
+
+    With ``cache``, the build is keyed on a content hash of (kernel, spec,
+    free-resource snapshot, replication knobs); a hit returns the previously
+    built CompiledKernel without running any compiler stage.
+    """
+    key = None
+    if cache is not None:
+        # lower to a DFG once so every entry point (direct call, Context,
+        # Scheduler probe) keys the same kernel identically — a str keyed by
+        # source text here and by DFG fingerprint elsewhere would fragment
+        # the shared cache into redundant entries
+        kernel = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+        key = make_cache_key(kernel, spec,
+                             free_fus=spec.n_fus - fu_headroom,
+                             free_io=spec.n_io - io_headroom,
+                             n_inputs=n_inputs, name=name,
+                             max_replicas=max_replicas, seed=seed,
+                             place_effort=place_effort)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+
     times: Dict[str, float] = {}
 
     t0 = time.perf_counter()
@@ -182,8 +219,11 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     prog = compile_program(fug.dfg)
     times["bitstream"] = (time.perf_counter() - t0) * 1e3
 
-    return CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
-                          routing, lat, bs, prog, times)
+    ck = CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
+                        routing, lat, bs, prog, times)
+    if cache is not None and key is not None:
+        cache.put(key, ck)
+    return ck
 
 
 def overlay_jit(fn: Callable, n_inputs: int, spec: Optional[OverlaySpec] = None,

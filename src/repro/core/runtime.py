@@ -1,4 +1,4 @@
-"""OpenCL-like runtime (paper §IV: pocl on the Zynq ARM).
+"""OpenCL-like runtime (paper §IV: pocl on the Zynq ARM) — v2.
 
 A minimal, faithful object model — Platform / Device / Context / Program /
 Kernel / Buffer — whose Device exposes the overlay geometry to the JIT
@@ -6,9 +6,22 @@ compiler (the paper's key runtime↔compiler contract), and whose Program
 objects are built *at run time* (`clBuildProgram` semantics) through
 :func:`repro.core.jit.jit_compile`.
 
-The runtime also owns the *resource ledger*: when other logic (or another
-kernel) occupies part of the overlay, subsequent builds see only the free
-remainder — this is what "resource-aware" means operationally.
+The runtime owns the *resource ledger*: every built Program **debits** the
+FUs and IO pads its replication plan occupies, and credits them back on
+:meth:`Program.release` — so a second build genuinely sees a smaller
+overlay, which is what "resource-aware" means operationally.  Reservations
+(:meth:`Context.reserve`) model other logic occupying fabric (paper Fig. 5).
+
+On top sit the serving-layer pieces:
+
+  * :class:`repro.core.cache.JITCache` — content-addressed compile cache a
+    Context (or a whole Scheduler) threads through ``jit_compile``;
+  * :class:`repro.core.queue.CommandQueue` — in/out-of-order kernel queues
+    with Event timestamps (see that module);
+  * :class:`Scheduler` — multi-device placement: an incoming kernel lands on
+    the device with the most free fabric; when nothing fits, the scheduler
+    sheds replicas from the busiest device's largest resident program to
+    make room (time-multiplexing the FU array across tenants).
 """
 
 from __future__ import annotations
@@ -19,12 +32,17 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.cache import JITCache
 from repro.core.jit import CompiledKernel, jit_compile
 from repro.core.overlay import OverlaySpec
 
 
 class RuntimeError_(RuntimeError):
     pass
+
+
+class SchedulerError(RuntimeError_):
+    """No device can host the kernel, even after replica shedding."""
 
 
 @dataclasses.dataclass
@@ -42,6 +60,19 @@ class Device:
     @property
     def io_free(self) -> int:
         return self.spec.n_io - self.io_used
+
+    # ------------------------------------------------------------- ledger
+    def debit(self, fus: int, io: int = 0) -> None:
+        if fus > self.fu_free or io > self.io_free:
+            raise RuntimeError_(
+                f"{self.name}: debit of {fus} FUs / {io} IO exceeds free "
+                f"{self.fu_free} FUs / {self.io_free} IO")
+        self.fu_used += fus
+        self.io_used += io
+
+    def credit(self, fus: int, io: int = 0) -> None:
+        self.fu_used = max(0, self.fu_used - fus)
+        self.io_used = max(0, self.io_used - io)
 
     def info(self) -> Dict[str, object]:
         """CL_DEVICE_* analogue; everything the compiler needs."""
@@ -72,9 +103,19 @@ class Buffer:
 
 
 class Context:
-    def __init__(self, device: Optional[Device] = None):
+    def __init__(self, device: Optional[Device] = None,
+                 cache: Optional[JITCache] = None):
         self.device = device or Platform.default().devices[0]
-        self._events: List[Dict[str, float]] = []
+        self.cache = cache
+        self.programs: List["Program"] = []
+        self.reserved_fus = 0
+        self.reserved_io = 0
+        # modelled overlay-engine timeline, shared by every CommandQueue on
+        # this context: busy intervals (sorted), the configuration-switch
+        # history (ascending), and the running end-of-timeline
+        self._engine_busy: List[tuple] = []        # [(start_us, end_us)]
+        self._config_switches: List[tuple] = []    # [(t_us, config_id)] asc
+        self._engine_end = 0.0
 
     # ----------------------------------------------------------- programs
     def build_program(self, source: Union[str, Callable],
@@ -82,39 +123,94 @@ class Context:
                       max_replicas: Optional[int] = None,
                       name: Optional[str] = None) -> "Program":
         """clBuildProgram: JIT-compile against the *currently free* overlay
-        resources exposed by the device."""
+        resources exposed by the device, then debit the ledger with the
+        plan's FU/IO usage (credited back by :meth:`Program.release`)."""
         t0 = time.perf_counter()
         ck = jit_compile(source, self.device.spec, n_inputs=n_inputs,
                          name=name, max_replicas=max_replicas,
                          fu_headroom=self.device.fu_used,
-                         io_headroom=self.device.io_used)
+                         io_headroom=self.device.io_used,
+                         cache=self.cache)
         build_ms = (time.perf_counter() - t0) * 1e3
-        return Program(self, ck, build_ms)
+        self.device.debit(ck.plan.fus_used, ck.plan.io_used)
+        prog = Program(self, ck, build_ms, source=source,
+                       build_kwargs=dict(n_inputs=n_inputs, name=name))
+        self.programs.append(prog)
+        return prog
 
     def reserve(self, fus: int, io: int = 0) -> None:
         """Model 'other logic' consuming fabric (paper Fig. 5)."""
-        if fus > self.device.fu_free or io > self.device.io_free:
-            raise RuntimeError_("reservation exceeds free resources")
-        self.device.fu_used += fus
-        self.device.io_used += io
+        self.device.debit(fus, io)
+        self.reserved_fus += fus
+        self.reserved_io += io
 
     def release(self, fus: int, io: int = 0) -> None:
-        self.device.fu_used = max(0, self.device.fu_used - fus)
-        self.device.io_used = max(0, self.device.io_used - io)
+        """Release a prior :meth:`reserve` (programs release themselves).
+        Mirrors the debit-side validation: crediting more than the
+        outstanding reservation would un-book fabric owned by resident
+        programs and corrupt the ledger."""
+        if fus > self.reserved_fus or io > self.reserved_io:
+            raise RuntimeError_(
+                f"release of {fus} FUs / {io} IO exceeds outstanding "
+                f"reservation {self.reserved_fus} FUs / {self.reserved_io} "
+                f"IO")
+        self.device.credit(fus, io)
+        self.reserved_fus -= fus
+        self.reserved_io -= io
+
+    # -------------------------------------------------------------- queues
+    def create_queue(self, in_order: bool = True,
+                     use_overlay_executor: bool = False):
+        from repro.core.queue import CommandQueue
+        return CommandQueue(self, in_order=in_order,
+                            use_overlay_executor=use_overlay_executor)
+
+    def ledger_consistent(self) -> bool:
+        """Invariant: device usage == reservations + resident programs."""
+        fus = self.reserved_fus + sum(p.compiled.plan.fus_used
+                                      for p in self.programs)
+        io = self.reserved_io + sum(p.compiled.plan.io_used
+                                    for p in self.programs)
+        return (fus == self.device.fu_used and io == self.device.io_used
+                and 0 <= self.device.fu_used <= self.device.spec.n_fus
+                and 0 <= self.device.io_used <= self.device.spec.n_io)
 
 
 class Program:
-    def __init__(self, ctx: Context, ck: CompiledKernel, build_ms: float):
+    def __init__(self, ctx: Context, ck: CompiledKernel, build_ms: float,
+                 source: Union[str, Callable, None] = None,
+                 build_kwargs: Optional[Dict] = None):
         self.ctx = ctx
         self.compiled = ck
         self.build_ms = build_ms
+        self.source = source
+        self.build_kwargs = build_kwargs or {}
+        self.released = False
 
     def create_kernel(self) -> "Kernel":
+        if self.released:
+            raise RuntimeError_("program was released")
         return Kernel(self)
 
     def configure_overlay(self) -> float:
         """'Load the bitstream': returns modelled config time in µs."""
         return self.compiled.bitstream.load_time_us()
+
+    def release(self) -> None:
+        """Credit the program's FUs/IO back to the device ledger."""
+        if self.released:
+            return
+        self.released = True
+        self.ctx.device.credit(self.compiled.plan.fus_used,
+                               self.compiled.plan.io_used)
+        if self in self.ctx.programs:
+            self.ctx.programs.remove(self)
+
+    def __enter__(self) -> "Program":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
 
 
 class Kernel:
@@ -126,8 +222,16 @@ class Kernel:
         self.args = list(buffers)
         return self
 
+    @property
+    def work_items(self) -> int:
+        return int(self.args[0].data.size) if self.args else 1
+
     def enqueue(self, use_overlay_executor: bool = False):
         """clEnqueueNDRangeKernel: run over all work-items of the buffers."""
+        if self.program.released:
+            raise RuntimeError_(
+                "kernel's program was released; its fabric may already be "
+                "occupied by another program")
         ck = self.program.compiled
         ins = [b.data for b in self.args]
         if len(ins) != len(ck.dfg.inputs):
@@ -139,3 +243,116 @@ class Kernel:
             outs = ck.run_reference(*ins)
         outs = outs if isinstance(outs, tuple) else (outs,)
         return tuple(Buffer(np.asarray(o)) for o in outs)
+
+
+# ================================================================ scheduler
+
+class Scheduler:
+    """Resource-aware placement of incoming kernels onto a device fleet.
+
+    Placement policy: best fit by free fabric — devices are tried in
+    descending (free FUs, free IO) order, and ``build_program`` itself sheds
+    replicas to fit whatever is free (headroom + congestion back-off in the
+    JIT).  When *no* device can host even a single replica, the scheduler
+    frees fabric by halving the replica count of the largest resident
+    program on the busiest device, and retries — multi-tenant time
+    multiplexing of the FU array.
+    """
+
+    def __init__(self, devices: Sequence[Device],
+                 cache: Optional[JITCache] = None):
+        if not devices:
+            raise ValueError("scheduler needs at least one device")
+        self.cache = cache if cache is not None else JITCache()
+        self.contexts: Dict[str, Context] = {
+            d.name: Context(d, cache=self.cache) for d in devices}
+
+    @property
+    def devices(self) -> List[Device]:
+        return [c.device for c in self.contexts.values()]
+
+    # ------------------------------------------------------------ placement
+    def build(self, source: Union[str, Callable],
+              n_inputs: Optional[int] = None,
+              name: Optional[str] = None,
+              max_replicas: Optional[int] = None,
+              max_shed_rounds: int = 8) -> Program:
+        """Place + JIT-build ``source`` on the best device; returns the
+        resident Program (release() it to free fabric)."""
+        from repro.core.jit import lower_to_dfg
+        from repro.core.latency import LatencyError
+        from repro.core.place import PlacementError
+        from repro.core.route import RoutingError
+
+        # lower to a DFG once: each per-device placement probe (and every
+        # shed retry) reuses it instead of re-parsing / re-tracing
+        source = lower_to_dfg(source, n_inputs, name, parse_source=True)
+
+        last_err: Optional[Exception] = None
+        for _ in range(max_shed_rounds + 1):
+            for ctx in sorted(self.contexts.values(),
+                              key=lambda c: (c.device.fu_free,
+                                             c.device.io_free),
+                              reverse=True):
+                try:
+                    return ctx.build_program(source, n_inputs=n_inputs,
+                                             name=name,
+                                             max_replicas=max_replicas)
+                except (PlacementError, RoutingError, LatencyError) as e:
+                    last_err = e
+                    self.cache.stats.build_failures += 1
+            if not self._shed_one():
+                break
+        raise SchedulerError(
+            f"kernel fits on no device (fleet of {len(self.contexts)}); "
+            f"last error: {last_err}")
+
+    def _shed_one(self) -> bool:
+        """Halve the replicas of the largest resident program on the busiest
+        device. Returns False when nothing sheddable remains (or the shed
+        rebuild itself fails, in which case the victim is restored)."""
+        from repro.core.latency import LatencyError
+        from repro.core.place import PlacementError
+        from repro.core.route import RoutingError
+        candidates = [(p, ctx) for ctx in self.contexts.values()
+                      for p in ctx.programs
+                      if p.compiled.plan.replicas > 1]
+        if not candidates:
+            return False
+        # busiest device first, then largest FU footprint
+        victim, ctx = max(candidates,
+                          key=lambda pc: (pc[1].device.fu_used,
+                                          pc[0].compiled.plan.fus_used))
+        target = max(1, victim.compiled.plan.replicas // 2)
+        source, kw = victim.source, victim.build_kwargs
+        victim.release()
+        try:
+            rebuilt = ctx.build_program(source, max_replicas=target, **kw)
+        except (PlacementError, RoutingError, LatencyError):
+            # rebuild failed (P&R can fail even at fewer replicas): restore
+            # the victim's residency rather than destroying a tenant's
+            # program — its fabric is still free, so the re-debit holds
+            ctx.device.debit(victim.compiled.plan.fus_used,
+                             victim.compiled.plan.io_used)
+            victim.released = False
+            ctx.programs.append(victim)
+            return False
+        # swap the smaller artifact into the victim in place: handles the
+        # owner already holds stay valid and resident
+        victim.compiled = rebuilt.compiled
+        victim.build_ms = rebuilt.build_ms
+        victim.released = False
+        ctx.programs[ctx.programs.index(rebuilt)] = victim
+        return True
+
+    # ----------------------------------------------------------- inspection
+    def ledger(self) -> Dict[str, Dict[str, int]]:
+        return {name: dict(fu_used=c.device.fu_used,
+                           fu_free=c.device.fu_free,
+                           io_used=c.device.io_used,
+                           io_free=c.device.io_free,
+                           programs=len(c.programs))
+                for name, c in self.contexts.items()}
+
+    def ledger_consistent(self) -> bool:
+        return all(c.ledger_consistent() for c in self.contexts.values())

@@ -41,10 +41,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, skv: int,
 
     def body(ki, carry):
         m_prev, l_prev, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)                # (BK, D)
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)  # (BK, D)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (BQ,BK)
         k_pos = ki * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)

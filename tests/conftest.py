@@ -1,0 +1,15 @@
+"""Suite-wide wiring.
+
+The suite is XLA-compile-bound on CPU (every smoke test jits a train step);
+these are semantics tests, not performance tests, so drop the backend
+optimization level unless the caller pinned one.  Subprocess tests
+(test_pipeline, test_sharded_numerics) set their own XLA_FLAGS and are
+unaffected.
+"""
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_backend_optimization_level" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_backend_optimization_level=0").strip()

@@ -5,6 +5,9 @@ path is identical code to the multi-device case)."""
 import dataclasses
 
 import jax
+import pytest
+
+pytestmark = pytest.mark.slow    # ~18 s convergence run; tier-1 skips it
 import jax.numpy as jnp
 import numpy as np
 

@@ -13,6 +13,19 @@ from repro.train.step import init_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)
 
+# eager model.init dominates this module's wall time (several seconds for
+# the deeper archs); build each reduced model + state once and share it —
+# tests only read params / run pure steps, never mutate in place
+_CACHE = {}
+
+
+def _model_and_state(arch):
+    if arch not in _CACHE:
+        cfg = reduced_config(ALL_ARCHS[arch])
+        model = build_model(cfg, remat_policy="none")
+        _CACHE[arch] = (cfg, model, init_state(model, KEY))
+    return _CACHE[arch]
+
 
 def _batch(cfg, b=2, s=32):
     toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
@@ -28,9 +41,7 @@ def _batch(cfg, b=2, s=32):
 
 @pytest.mark.parametrize("arch", sorted(ALL_ARCHS))
 def test_smoke_forward_and_train_step(arch):
-    cfg = reduced_config(ALL_ARCHS[arch])
-    model = build_model(cfg, remat_policy="none")
-    state = init_state(model, KEY)
+    cfg, model, state = _model_and_state(arch)
     batch = _batch(cfg)
     logits = model.forward_train(state["params"], batch["tokens"],
                                  batch.get("input_embeds"))
@@ -52,9 +63,8 @@ def test_smoke_forward_and_train_step(arch):
 
 @pytest.mark.parametrize("arch", sorted(ALL_ARCHS))
 def test_smoke_decode_step(arch):
-    cfg = reduced_config(ALL_ARCHS[arch])
-    model = build_model(cfg, remat_policy="none")
-    params = model.init(KEY)
+    cfg, model, state = _model_and_state(arch)
+    params = state["params"]
     b, cache_len = 2, 48
     cache = model.init_cache(b, cache_len)
     tok = jnp.zeros((b, 1), jnp.int32)
@@ -65,7 +75,11 @@ def test_smoke_decode_step(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
-@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-14b", "mixtral-8x22b"])
+@pytest.mark.parametrize("arch", [
+    "llama3-8b",
+    pytest.param("qwen3-14b", marks=pytest.mark.slow),
+    pytest.param("mixtral-8x22b", marks=pytest.mark.slow),
+])
 def test_decode_matches_train_forward(arch):
     """Sequential decode must reproduce the training forward logits.
 
@@ -74,11 +88,14 @@ def test_decode_matches_train_forward(arch):
     (G=B·S) and per-token decode (G=B) — with drops, the two modes are
     legitimately different."""
     import dataclasses
-    cfg = reduced_config(ALL_ARCHS[arch])
-    if cfg.family == "moe":
-        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
-    model = build_model(cfg, remat_policy="none")
-    params = model.init(KEY)
+    if ALL_ARCHS[arch].family == "moe":
+        cfg = dataclasses.replace(reduced_config(ALL_ARCHS[arch]),
+                                  capacity_factor=16.0)
+        model = build_model(cfg, remat_policy="none")
+        params = model.init(KEY)
+    else:
+        cfg, model, state = _model_and_state(arch)
+        params = state["params"]
     b, s = 1, 12
     toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
     want = model.forward_train(params, toks)        # (b, s, V)
@@ -95,11 +112,11 @@ def test_decode_matches_train_forward(arch):
                                rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 def test_mamba_decode_matches_train_forward():
     """SSD chunked scan (train) ≡ stepwise recurrence (decode)."""
-    cfg = reduced_config(ALL_ARCHS["mamba2-370m"])
-    model = build_model(cfg, remat_policy="none")
-    params = model.init(KEY)
+    cfg, model, state = _model_and_state("mamba2-370m")
+    params = state["params"]
     b, s = 1, 16     # multiple of reduced ssm_chunk=8
     toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
     want = model.forward_train(params, toks)

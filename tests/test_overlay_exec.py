@@ -30,7 +30,8 @@ def _program(name):
 
 
 @pytest.mark.parametrize("name", sorted(KERNELS))
-@pytest.mark.parametrize("n_items", [1, 7, 128, 1000])
+@pytest.mark.parametrize("n_items", [
+    1, 7, 200, pytest.param(1000, marks=pytest.mark.slow)])
 def test_kernel_matches_oracle(name, n_items):
     prog, n_in = _program(name)
     rng = np.random.default_rng(42)

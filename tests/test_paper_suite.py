@@ -81,6 +81,9 @@ def test_resource_aware_rebuild_after_reservation():
     ctx = Context(Device("dev0", SPEC))
     full = ctx.build_program(BENCHMARKS["chebyshev"][0])
     r_full = full.compiled.plan.replicas
+    # builds now debit the ledger, so free the program before 'other logic'
+    # claims the fabric (runtime v2 semantics)
+    full.release()
     ctx.reserve(fus=SPEC.n_fus - full.compiled.fug.n_fus * 2, io=0)
     small = ctx.build_program(BENCHMARKS["chebyshev"][0])
     r_small = small.compiled.plan.replicas

@@ -4,13 +4,10 @@ ANY pointwise kernel, not just the paper's six."""
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYP = True
-except ImportError:          # pragma: no cover
-    HAVE_HYP = False
-
-pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+# importorskip aborts collection of this module cleanly when hypothesis is
+# absent — a skipif mark cannot guard the module-level @given/@settings uses.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
 
 from repro.core.dfg import DFG, cse, constant_fold, dce, optimize, trace
 from repro.core.fuse import fuse_muladd, to_fu_graph
