@@ -7,18 +7,23 @@
   overlay_exec_perf   → executor micro-benchmark
   model_step          → per-arch reduced train-step wall time
   roofline_report     → §Roofline table from the dry-run artifacts
+  template_build_perf → template-stamp vs joint-anneal cold builds
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
+writes the same rows as machine-readable JSON (one object per row with
+``suite``/``name``/``us_per_call``/``derived``) so the perf trajectory can
+be tracked across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from benchmarks import (model_step, overlay_exec_perf, par_time,
                         reconfig_time, replication_scaling, resource_table,
-                        roofline_report)
+                        roofline_report, template_build_perf)
 
 SUITES = {
     "par_time": par_time.run,
@@ -28,6 +33,7 @@ SUITES = {
     "overlay_exec_perf": overlay_exec_perf.run,
     "model_step": model_step.run,
     "roofline_report": roofline_report.run,
+    "template_build_perf": template_build_perf.run,
 }
 
 
@@ -35,19 +41,29 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", choices=sorted(SUITES), default=None,
                     help="run one suite (default: all)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as machine-readable JSON")
     args = ap.parse_args()
     names = [args.suite] if args.suite else list(SUITES)
     print("name,us_per_call,derived")
     failures = 0
+    out_rows = []
     for n in names:
         try:
             for row in SUITES[n]():
                 print(f"{row['name']},{row['us_per_call']:.2f},"
                       f"\"{row['derived']}\"")
                 sys.stdout.flush()
+                out_rows.append(dict(suite=n, **row))
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{n}/ERROR,0,\"{type(e).__name__}: {e}\"")
+            out_rows.append(dict(suite=n, name=f"{n}/ERROR", us_per_call=0.0,
+                                 derived=f"{type(e).__name__}: {e}"))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out_rows, f, indent=1)
+        print(f"wrote {len(out_rows)} rows to {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -64,20 +64,18 @@ def spec_fingerprint(spec: OverlaySpec) -> str:
 def kernel_fingerprint(kernel: Union[str, Callable, DFG],
                        n_inputs: Optional[int] = None,
                        name: Optional[str] = None) -> str:
-    """Content hash of the kernel alone (no overlay / resource context)."""
+    """Content hash of the kernel alone (no overlay / resource context).
+
+    DFGs and callables hash the same optimized normal form — delegated to
+    ``jit.lower_to_dfg`` so the form has ONE definition — and a kernel
+    reaches one cache entry whether it arrives raw-traced, pre-optimized,
+    or as a callable (closure constants land in the hash as DFG immediates;
+    hashing code bytes would wrongly share entries between closures over
+    different constants)."""
     if isinstance(kernel, str):
         return "src:" + hashlib.sha256(kernel.encode()).hexdigest()
-    if isinstance(kernel, DFG):
-        return "dfg:" + dfg_fingerprint(kernel)
-    # Python callable: trace it so closure constants land in the hash as DFG
-    # immediates.  Hashing code bytes would wrongly share entries between
-    # closures over different constants.
-    from repro.core.dfg import trace
-    from repro.core.ir import _lower_consts
-    if n_inputs is None:
-        raise ValueError("n_inputs required to fingerprint a python kernel")
-    return "fn:" + dfg_fingerprint(_lower_consts(trace(kernel, n_inputs,
-                                                       name)))
+    from repro.core.jit import lower_to_dfg   # lazy: no cycle at call time
+    return "dfg:" + dfg_fingerprint(lower_to_dfg(kernel, n_inputs, name))
 
 
 def make_cache_key(kernel: Union[str, Callable, DFG],
@@ -88,13 +86,27 @@ def make_cache_key(kernel: Union[str, Callable, DFG],
                    name: Optional[str] = None,
                    max_replicas: Optional[int] = None,
                    seed: int = 0,
-                   place_effort: float = 1.0) -> CacheKey:
+                   place_effort: float = 1.0,
+                   pr_mode: str = "auto") -> CacheKey:
     """The full key: kernel content × overlay × free-resource snapshot ×
-    replication knobs."""
+    replication knobs × P&R mode."""
     kf = kernel_fingerprint(kernel, n_inputs=n_inputs, name=name)
     ctx = (f"{spec_fingerprint(spec)}:{free_fus}:{free_io}:"
-           f"{max_replicas}:{seed}:{place_effort:g}")
+           f"{max_replicas}:{seed}:{place_effort:g}:{pr_mode}")
     return f"{kf}@{hashlib.sha256(ctx.encode()).hexdigest()[:16]}"
+
+
+def make_template_key(g: DFG, spec: OverlaySpec, seed: int = 0,
+                      place_effort: float = 1.0) -> CacheKey:
+    """Stage-level key for P&R templates (:mod:`repro.core.template`).
+
+    Deliberately **independent of the free-resource snapshot** and of
+    ``max_replicas``: the template is a single placed+routed replica, equally
+    valid at any replica count — that independence is what turns a
+    replica-count change (shedding, re-inflation) into a stamp instead of a
+    recompile."""
+    return (f"tpl:{dfg_fingerprint(g)}@{spec_fingerprint(spec)[:16]}:"
+            f"{seed}:{place_effort:g}")
 
 
 # -------------------------------------------------------------------- cache
@@ -109,6 +121,11 @@ class CacheStats:
     # placement probes on a full device) — without this the dashboard
     # hit_rate under-reads real cache behaviour
     build_failures: int = 0
+    # stage-level template store (see make_template_key): a template hit on a
+    # full-key miss means the build skipped place/route/latency entirely
+    template_hits: int = 0
+    template_misses: int = 0
+    template_evictions: int = 0
 
     @property
     def lookups(self) -> int:
@@ -122,6 +139,9 @@ class CacheStats:
         return dict(hits=self.hits, misses=self.misses,
                     insertions=self.insertions, evictions=self.evictions,
                     build_failures=self.build_failures,
+                    template_hits=self.template_hits,
+                    template_misses=self.template_misses,
+                    template_evictions=self.template_evictions,
                     hit_rate=round(self.hit_rate, 4))
 
 
@@ -133,11 +153,15 @@ class JITCache:
     runtime ledger, never in the cache.
     """
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128, template_capacity: int = 64):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if template_capacity < 1:
+            raise ValueError("template_capacity must be >= 1")
         self.capacity = capacity
+        self.template_capacity = template_capacity
         self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._templates: "OrderedDict[CacheKey, Any]" = OrderedDict()
         self.stats = CacheStats()
 
     # ------------------------------------------------------------- protocol
@@ -171,8 +195,28 @@ class JITCache:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
 
+    # ------------------------------------------------------------ templates
+    def get_template(self, key: CacheKey):
+        """Stage-level lookup of a P&R :class:`~repro.core.template.Template`;
+        counts template_hits/template_misses and refreshes recency."""
+        entry = self._templates.get(key)
+        if entry is None:
+            self.stats.template_misses += 1
+            return None
+        self._templates.move_to_end(key)
+        self.stats.template_hits += 1
+        return entry
+
+    def put_template(self, key: CacheKey, tmpl) -> None:
+        self._templates[key] = tmpl
+        self._templates.move_to_end(key)
+        while len(self._templates) > self.template_capacity:
+            self._templates.popitem(last=False)
+            self.stats.template_evictions += 1
+
     def clear(self) -> None:
         self._entries.clear()
+        self._templates.clear()
 
     def __repr__(self) -> str:
         return (f"JITCache({len(self)}/{self.capacity} entries, "

@@ -65,6 +65,10 @@ class DFG:
         self.inputs: List[int] = []   # invar node ids, in argument order
         self.outputs: List[int] = []  # outvar node ids, in result order
         self._next = 0
+        # set by optimize(): lets the JIT frontend skip re-optimizing a DFG
+        # that already went through the pass pipeline (e.g. the cache-keying
+        # path lowers source before the frontend stage runs)
+        self.optimized = False
 
     # ------------------------------------------------------------- building
     def add(self, op: str, args: Sequence[int] = (), imm: Optional[float] = None,
@@ -79,6 +83,7 @@ class DFG:
             self.inputs.append(nid)
         elif op == "output":
             self.outputs.append(nid)
+        self.optimized = False   # mutation invalidates the optimized form
         return nid
 
     # ------------------------------------------------------------ structure
@@ -200,6 +205,7 @@ class DFG:
         g.inputs = list(self.inputs)
         g.outputs = list(self.outputs)
         g._next = self._next
+        g.optimized = self.optimized
         return g
 
 
@@ -365,4 +371,5 @@ def optimize(g: DFG) -> DFG:
     g = cse(g)
     g = dce(g)
     g.validate()
+    g.optimized = True
     return g

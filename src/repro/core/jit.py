@@ -12,6 +12,21 @@ these) and three execution paths:
                          interpreter); program is data, so swapping kernels
                          does NOT recompile XLA (the 42 µs-reconfig analogue).
   * ``run_reference``  — pure-numpy oracle.
+
+Two P&R strategies feed the place/route/latency stages (``pr_mode``):
+
+  * ``"template"`` — place & route ONE replica in a compact region and stamp
+    R translated copies (:mod:`repro.core.template`).  P&R cost is O(one
+    replica); with a :class:`~repro.core.cache.JITCache` the template itself
+    is cached on (kernel, spec, seed, effort) — independent of the
+    free-resource snapshot — so replica-count changes skip place/route
+    entirely and only re-stamp (``stage_times_ms["stamp"]``).
+  * ``"joint"``    — the original annealer over all R replicas at once;
+    slower but can pack replicas that the regular stamp grid cannot (it may
+    use all four perimeter edges at once).
+  * ``"auto"``     — the default: template when stamping reaches the planned
+    replica count, joint otherwise, so resource-aware maximal replication is
+    never silently degraded.
 """
 
 from __future__ import annotations
@@ -23,8 +38,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import dfg as dfg_mod
+from repro.core import template as template_mod
 from repro.core.bitstream import Bitstream, generate
-from repro.core.cache import JITCache, make_cache_key
+from repro.core.cache import JITCache, make_cache_key, make_template_key
 from repro.core.dfg import DFG, optimize, trace
 from repro.core.fuse import FUGraph, to_fu_graph
 from repro.core.ir import compile_opencl_to_dfg, _lower_consts
@@ -50,11 +66,13 @@ class CompiledKernel:
     bitstream: Bitstream
     program: OverlayProgram
     stage_times_ms: Dict[str, float]
+    pr_path: str = "joint"        # which P&R strategy produced the artifact
 
     # ------------------------------------------------------------- numbers
     @property
     def par_time_ms(self) -> float:
-        return (self.stage_times_ms["place"] + self.stage_times_ms["route"])
+        return (self.stage_times_ms["place"] + self.stage_times_ms["route"] +
+                self.stage_times_ms.get("stamp", 0.0))
 
     @property
     def compile_time_ms(self) -> float:
@@ -103,14 +121,20 @@ def lower_to_dfg(kernel: Union[str, Callable, DFG],
                  parse_source: bool = False) -> Union[str, DFG]:
     """Lower a callable (and, with ``parse_source``, OpenCL-C text) to a DFG
     so repeated compile probes / cache keying don't re-trace or re-parse.
-    DFGs pass through; str passes through unless ``parse_source``."""
+    DFGs pass through; str passes through unless ``parse_source``.
+
+    Every returned DFG is fully optimized (``DFG.optimized`` set), so the
+    frontend stage of a subsequent ``jit_compile`` is a no-op and every
+    entry point keys the same kernel by the same normal form — a cache miss
+    pays the frontend exactly once whichever path lowered the kernel."""
     if isinstance(kernel, DFG):
-        return kernel
+        return kernel if kernel.optimized else \
+            optimize(_lower_consts(kernel))
     if isinstance(kernel, str):
         return compile_opencl_to_dfg(kernel) if parse_source else kernel
     if n_inputs is None:
         raise ValueError("n_inputs required when tracing a python kernel")
-    return _lower_consts(trace(kernel, n_inputs, name))
+    return optimize(_lower_consts(trace(kernel, n_inputs, name)))
 
 
 def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
@@ -118,6 +142,11 @@ def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
     if isinstance(kernel, str):
         return compile_opencl_to_dfg(kernel)   # parses + optimizes
     g = lower_to_dfg(kernel, n_inputs, name)
+    if g.optimized:
+        # already through the pass pipeline (cache keying lowers + optimizes
+        # before this stage runs) — re-optimizing would double the frontend
+        # cost of every cache miss
+        return g
     return optimize(_lower_consts(g))
 
 
@@ -130,14 +159,20 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                 io_headroom: int = 0,
                 seed: int = 0,
                 place_effort: float = 1.0,
-                cache: Optional["JITCache"] = None) -> CompiledKernel:
+                cache: Optional["JITCache"] = None,
+                pr_mode: str = "auto") -> CompiledKernel:
     """Full JIT pipeline. Raises PlacementError/RoutingError/LatencyError on
     genuine mapping failures (kernel too big for the exposed overlay).
 
     With ``cache``, the build is keyed on a content hash of (kernel, spec,
     free-resource snapshot, replication knobs); a hit returns the previously
-    built CompiledKernel without running any compiler stage.
+    built CompiledKernel without running any compiler stage.  ``pr_mode``
+    selects the P&R strategy (see module docstring): ``"auto"`` (default),
+    ``"template"``, or ``"joint"``.
     """
+    if pr_mode not in ("auto", "template", "joint"):
+        raise ValueError(f"pr_mode must be auto|template|joint, "
+                         f"got {pr_mode!r}")
     key = None
     if cache is not None:
         # lower to a DFG once so every entry point (direct call, Context,
@@ -150,7 +185,7 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                              free_io=spec.n_io - io_headroom,
                              n_inputs=n_inputs, name=name,
                              max_replicas=max_replicas, seed=seed,
-                             place_effort=place_effort)
+                             place_effort=place_effort, pr_mode=pr_mode)
         hit = cache.get(key)
         if hit is not None:
             return hit
@@ -175,44 +210,48 @@ def jit_compile(kernel: Union[str, Callable, DFG],
             f"{spec.n_fus - fu_headroom} FUs / {spec.n_io - io_headroom} IO")
     times["replicate"] = (time.perf_counter() - t0) * 1e3
 
-    # P&R with resource-aware back-off: if the requested replication is
-    # unroutable (congestion) or latency-unbalanceable, shed replicas — the
-    # compiler's job is the best mapping that *fits*, exactly as on the
-    # hardware.
-    from repro.core.latency import LatencyError
-    from repro.core.route import RoutingError
-    import dataclasses as _dc
-
-    last_err: Optional[Exception] = None
     placement = routing = lat = None
-    t_place = t_route = t_lat = 0.0
-    replicas = plan.replicas
-    while replicas >= 1:
-        try:
-            t0 = time.perf_counter()
-            placement = place(fug, spec, replicas=replicas, seed=seed,
-                              effort=place_effort)
-            t_place = (time.perf_counter() - t0) * 1e3
-            t0 = time.perf_counter()
-            routing = route(fug, spec, placement, replicas=replicas)
-            t_route = (time.perf_counter() - t0) * 1e3
-            t0 = time.perf_counter()
-            lat = balance(fug, spec, routing)
-            t_lat = (time.perf_counter() - t0) * 1e3
-            break
-        except (RoutingError, LatencyError) as e:
-            last_err = e
-            replicas -= max(1, replicas // 8)
-    if placement is None or routing is None or lat is None:
-        raise last_err  # even a single copy does not map
-    if replicas != plan.replicas:
-        plan = _dc.replace(plan, replicas=replicas,
-                           fus_used=replicas * fug.n_fus,
-                           io_used=replicas * fug.n_io,
-                           limited_by="congestion")
-    times["place"] = t_place
-    times["route"] = t_route
-    times["latency"] = t_lat
+    pr_path = "joint"
+
+    # ---- template path: P&R one replica, stamp R copies -------------------
+    if pr_mode in ("auto", "template"):
+        out = _template_par(fug, g, spec, plan, seed, place_effort, cache,
+                            pr_mode, times)
+        if out is not None:
+            placement, routing, lat, plan = out
+            pr_path = "template"
+
+    # ---- joint path: anneal all replicas, congestion back-off -------------
+    if placement is None:
+        from repro.core.latency import LatencyError
+        from repro.core.route import RoutingError
+
+        last_err: Optional[Exception] = None
+        t_place = t_route = t_lat = 0.0
+        replicas = plan.replicas
+        while replicas >= 1:
+            try:
+                t0 = time.perf_counter()
+                placement = place(fug, spec, replicas=replicas, seed=seed,
+                                  effort=place_effort)
+                t_place = (time.perf_counter() - t0) * 1e3
+                t0 = time.perf_counter()
+                routing = route(fug, spec, placement, replicas=replicas)
+                t_route = (time.perf_counter() - t0) * 1e3
+                t0 = time.perf_counter()
+                lat = balance(fug, spec, routing)
+                t_lat = (time.perf_counter() - t0) * 1e3
+                break
+            except (RoutingError, LatencyError) as e:
+                last_err = e
+                replicas -= max(1, replicas // 8)
+        if placement is None or routing is None or lat is None:
+            raise last_err  # even a single copy does not map
+        if replicas != plan.replicas:
+            plan = plan.with_replicas(fug, replicas, "congestion")
+        times["place"] = t_place
+        times["route"] = t_route
+        times["latency"] = t_lat
 
     t0 = time.perf_counter()
     bs = generate(fug, spec, placement, routing, lat, plan.replicas)
@@ -220,10 +259,64 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     times["bitstream"] = (time.perf_counter() - t0) * 1e3
 
     ck = CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
-                        routing, lat, bs, prog, times)
+                        routing, lat, bs, prog, times, pr_path=pr_path)
     if cache is not None and key is not None:
         cache.put(key, ck)
     return ck
+
+
+def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
+                  plan: ReplicationPlan, seed: int, place_effort: float,
+                  cache: Optional["JITCache"], pr_mode: str,
+                  times: Dict[str, float]):
+    """Try the template-stamping P&R path.
+
+    Returns (placement, routing, latency, plan) or None to fall back to the
+    joint annealer.  In ``auto`` mode the template is used only when stamping
+    reaches the planned replica count (so maximal resource-aware replication
+    is never silently reduced); forced ``template`` mode stamps as many
+    replicas as the slot capacity allows and marks the plan 'stamp'-limited.
+    """
+    if pr_mode == "auto" and \
+            template_mod.estimate_capacity(fug, spec) < plan.replicas:
+        return None
+
+    tkey = make_template_key(g, spec, seed, place_effort) \
+        if cache is not None else None
+    tmpl = cache.get_template(tkey) if cache is not None else None
+    built = False
+    if tmpl is None:
+        try:
+            tmpl = template_mod.build_template(fug, spec, seed=seed,
+                                               effort=place_effort)
+        except template_mod.TemplateError:
+            if pr_mode == "template":
+                raise
+            return None
+        built = True
+        if cache is not None:
+            cache.put_template(tkey, tmpl)
+
+    # plan.replicas >= 1 was enforced above and a built Template always has
+    # at least one verified slot, so replicas >= 1 here
+    replicas = min(plan.replicas, tmpl.capacity)
+    if pr_mode == "auto" and replicas < plan.replicas:
+        if built:
+            # falling back to joint: keep the spent template build on the
+            # books so compile_time_ms reports real wall time
+            times["template_probe"] = sum(tmpl.build_ms.values())
+        return None
+
+    # a template hit means the place/route/latency stages did not run at all
+    times["place"] = tmpl.build_ms["place"] if built else 0.0
+    times["route"] = tmpl.build_ms["route"] if built else 0.0
+    times["latency"] = tmpl.build_ms["latency"] if built else 0.0
+    t0 = time.perf_counter()
+    placement, routing, lat = template_mod.stamp(tmpl, spec, replicas)
+    times["stamp"] = (time.perf_counter() - t0) * 1e3
+    if replicas != plan.replicas:
+        plan = plan.with_replicas(fug, replicas, "stamp")
+    return placement, routing, lat, plan
 
 
 def overlay_jit(fn: Callable, n_inputs: int, spec: Optional[OverlaySpec] = None,

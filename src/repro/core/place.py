@@ -3,6 +3,17 @@
 Maps SuperNodes (FUs) to overlay tiles and kernel I/O to perimeter IO sites,
 minimising total half-perimeter bounding-box wirelength — the same cost VPR
 uses.  Deterministic given the seed, so configs are reproducible artifacts.
+
+Two annealers live here:
+
+  * :func:`place` — the original joint annealer that places all R replicas at
+    once on the full fabric (kept for parity testing and as the fallback when
+    template stamping cannot reach the planned replica count);
+  * :func:`anneal_single` — the single-replica annealer used by the
+    template-stamping pipeline (:mod:`repro.core.template`).  Its hot loop is
+    vectorized: net endpoints are precomputed into numpy index arrays and the
+    cost delta of a move is evaluated as one batched numpy expression over
+    the moved keys' incident nets instead of a python loop per net.
 """
 
 from __future__ import annotations
@@ -10,7 +21,9 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.fuse import FUGraph
 from repro.core.overlay import Coord, OverlaySpec
@@ -172,3 +185,145 @@ def place(fug: FUGraph, spec: OverlaySpec, replicas: int = 1,
 
     return Placement(dict(fu_pos), dict(in_pos), dict(out_pos),
                      float(cost), moves_done)
+
+
+# ===================================================== single-replica anneal
+
+@dataclasses.dataclass
+class SinglePlacement:
+    """One replica placed on explicit site pools (template frame)."""
+    fu_pos: Dict[int, Coord]      # sid -> tile
+    in_pos: Dict[int, Coord]      # invar idx -> io site
+    out_pos: Dict[int, Coord]     # outvar idx -> io site
+    cost: float
+    moves: int
+
+    def as_placement(self) -> Placement:
+        return Placement({(0, s): p for s, p in self.fu_pos.items()},
+                         {(0, i): p for i, p in self.in_pos.items()},
+                         {(0, i): p for i, p in self.out_pos.items()},
+                         self.cost, self.moves)
+
+
+def anneal_single(fug: FUGraph, tiles: Sequence[Coord],
+                  io_sites: Sequence[Coord], seed: int = 0,
+                  effort: float = 1.0) -> SinglePlacement:
+    """Place ONE replica onto the given tile/IO site pools.
+
+    The caller restricts the pools to a region (e.g. a template strip); every
+    FU lands on a distinct tile and every kernel I/O on a distinct IO site
+    (sites may repeat in ``io_sites`` up to their physical multiplicity).
+
+    The hot loop is fully vectorized: net endpoints are precomputed into
+    numpy weight matrices, and each iteration evaluates the wirelength delta
+    of EVERY candidate move at once — an (n_keys × n_slots) relocation-cost
+    matrix from one broadcast plus an all-pairs swap-delta matrix — then
+    applies the steepest one.  Seeded random restarts (``effort`` many)
+    replace the temperature schedule; deterministic given the seed.
+    """
+    n_fu, n_in, n_out = fug.n_fus, fug.n_in, fug.n_out
+    if n_fu > len(tiles):
+        raise PlacementError(f"{n_fu} FUs > {len(tiles)} region tiles")
+    if n_in + n_out > len(io_sites):
+        raise PlacementError(
+            f"I/O demand {n_in + n_out} > {len(io_sites)} region pads")
+    rng = random.Random(seed)
+    n_keys = n_fu + n_in + n_out
+
+    def key_of(kind: str, i: int) -> int:
+        return {"fu": 0, "in": n_fu, "out": n_fu + n_in}[kind] + i
+
+    # symmetric net-count matrix between keys (multi-edges accumulate)
+    w = np.zeros((n_keys, n_keys), np.float64)
+    for sk, si, dk, di, _p in fug.edges:
+        a, b = key_of(sk, si), key_of(dk, di)
+        w[a, b] += 1.0
+        w[b, a] += 1.0
+
+    tiles_arr = np.asarray(tiles, np.float64).reshape(-1, 2)
+    pads_arr = np.asarray(io_sites, np.float64).reshape(-1, 2)
+    domains = [(np.arange(0, n_fu), tiles_arr),
+               (np.arange(n_fu, n_keys), pads_arr)]
+
+    def descend(pos: np.ndarray, slot_of: np.ndarray
+                ) -> Tuple[np.ndarray, float, int]:
+        """Steepest-descent to a local optimum; returns (pos, cost, moves).
+        ``slot_of`` (key → domain-local slot index) is maintained
+        incrementally across moves, never recomputed."""
+        moves = 0
+        improved = True
+        while improved:
+            improved = False
+            for keys, slots in domains:
+                if not len(keys):
+                    continue
+                n, s = len(keys), len(slots)
+                # relocation-cost matrix: d[k, t] = wirelength of key k if it
+                # sat at slot t, everything else fixed — one broadcast
+                dist = np.abs(slots[:, None, :] - pos[None, :, :]).sum(-1)
+                d = w[keys] @ dist.T
+                occ = slot_of[keys]
+                base = d[np.arange(n), occ]
+                free = np.ones(s, bool)
+                free[occ] = False
+                best_delta, best_move = 0.0, None
+                if free.any():
+                    rel = d[:, free] - base[:, None]
+                    k, t = np.unravel_index(np.argmin(rel), rel.shape)
+                    if rel[k, t] < -1e-9:
+                        best_delta = rel[k, t]
+                        best_move = ("free", keys[k],
+                                     np.flatnonzero(free)[t])
+                if n > 1:
+                    # swap-delta matrix; +2·w·dist corrects nets between the
+                    # swapped pair (their length is swap-invariant)
+                    a = d[:, occ]
+                    pair = np.abs(pos[keys][:, None, :] -
+                                  pos[keys][None, :, :]).sum(-1)
+                    sw = (a + a.T - base[:, None] - base[None, :] +
+                          2.0 * w[np.ix_(keys, keys)] * pair)
+                    np.fill_diagonal(sw, 0.0)
+                    k, l = np.unravel_index(np.argmin(sw), sw.shape)
+                    if sw[k, l] < best_delta - 1e-9:
+                        best_delta = sw[k, l]
+                        best_move = ("swap", keys[k], keys[l])
+                if best_move is not None and best_delta < -1e-9:
+                    if best_move[0] == "free":
+                        _, gk, t = best_move
+                        pos[gk] = slots[t]
+                        slot_of[gk] = t
+                    else:
+                        _, gk, gl = best_move
+                        pos[[gk, gl]] = pos[[gl, gk]]
+                        slot_of[[gk, gl]] = slot_of[[gl, gk]]
+                    moves += 1
+                    improved = True
+        cost = float((w * np.abs(pos[:, None, :] - pos[None, :, :]
+                                 ).sum(-1)).sum() / 2.0)
+        return pos, cost, moves
+
+    restarts = max(1, int(round(effort)))
+    best = None
+    for _r in range(restarts):
+        tile_order = list(range(len(tiles)))
+        rng.shuffle(tile_order)
+        pad_order = list(range(len(io_sites)))
+        rng.shuffle(pad_order)
+        pos = np.empty((n_keys, 2), np.float64)
+        pos[:n_fu] = tiles_arr[tile_order[:n_fu]]
+        pos[n_fu:] = pads_arr[pad_order[:n_in + n_out]]
+        slot_of = np.empty(n_keys, np.int64)
+        slot_of[:n_fu] = tile_order[:n_fu]
+        slot_of[n_fu:] = pad_order[:n_in + n_out]
+        pos, cost, moves = descend(pos, slot_of)
+        if best is None or cost < best[1]:
+            best = (pos.copy(), cost, moves)
+    pos, cost, moves = best
+
+    fu_pos = {s: (int(pos[s][0]), int(pos[s][1])) for s in range(n_fu)}
+    in_pos = {i: (int(pos[n_fu + i][0]), int(pos[n_fu + i][1]))
+              for i in range(n_in)}
+    out_pos = {i: (int(pos[n_fu + n_in + i][0]), int(pos[n_fu + n_in + i][1]))
+               for i in range(n_out)}
+    return SinglePlacement(fu_pos, in_pos, out_pos, float(cost), moves)
+

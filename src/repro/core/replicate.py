@@ -23,11 +23,20 @@ class ReplicationPlan:
     fus_total: int
     io_used: int
     io_total: int
-    limited_by: str              # 'fu' | 'io' | 'request'
+    limited_by: str              # 'fu' | 'io' | 'request' | 'congestion'
+    #                            # | 'stamp' (template slot capacity)
 
     @property
     def fu_utilisation(self) -> float:
         return self.fus_used / max(1, self.fus_total)
+
+    def with_replicas(self, fug: FUGraph, replicas: int,
+                      limited_by: str) -> "ReplicationPlan":
+        """The same plan re-targeted at a different replica count (congestion
+        shedding, template stamp capacity) with usage recomputed."""
+        return dataclasses.replace(
+            self, replicas=replicas, fus_used=replicas * fug.n_fus,
+            io_used=replicas * fug.n_io, limited_by=limited_by)
 
 
 def plan_replication(fug: FUGraph, spec: OverlaySpec,

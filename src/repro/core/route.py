@@ -60,8 +60,13 @@ def _pos(placement: Placement, kind: str, key: Tuple[int, int]) -> Coord:
 
 
 def route(fug: FUGraph, spec: OverlaySpec, placement: Placement,
-          replicas: int = 1, max_iters: int = 60) -> RoutingResult:
-    rg = RoutingGraph(spec)
+          replicas: int = 1, max_iters: int = 60,
+          rg: Optional[RoutingGraph] = None) -> RoutingResult:
+    """Route the placed netlist.  ``rg`` restricts routing to a sub-graph of
+    the fabric (the template pipeline passes a strip-local graph so routes
+    provably never leave the stamped region)."""
+    if rg is None:
+        rg = RoutingGraph(spec)
 
     # ---- group edges into multi-terminal nets keyed by source
     sinks_of: Dict[Tuple[str, Tuple[int, int]], List] = {}

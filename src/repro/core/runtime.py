@@ -110,6 +110,9 @@ class Context:
         self.programs: List["Program"] = []
         self.reserved_fus = 0
         self.reserved_io = 0
+        # called with the released Program after its fabric is credited back;
+        # the Scheduler hooks this to re-inflate shed programs
+        self.on_release: Optional[Callable[["Program"], None]] = None
         # modelled overlay-engine timeline, shared by every CommandQueue on
         # this context: busy intervals (sorted), the configuration-switch
         # history (ascending), and the running end-of-timeline
@@ -186,6 +189,13 @@ class Program:
         self.source = source
         self.build_kwargs = build_kwargs or {}
         self.released = False
+        # the replica count this program was first built at; shedding swaps a
+        # smaller artifact into `compiled` but leaves this untouched, so the
+        # scheduler knows how far to re-inflate once fabric frees up
+        self.planned_replicas = ck.plan.replicas
+        # free-resource level (fu, io) at the last re-inflation attempt that
+        # produced no growth; retried only once more fabric than that frees
+        self.grow_failed_free: Optional[tuple] = None
 
     def create_kernel(self) -> "Kernel":
         if self.released:
@@ -205,6 +215,8 @@ class Program:
                                self.compiled.plan.io_used)
         if self in self.ctx.programs:
             self.ctx.programs.remove(self)
+        if self.ctx.on_release is not None:
+            self.ctx.on_release(self)
 
     def __enter__(self) -> "Program":
         return self
@@ -257,6 +269,13 @@ class Scheduler:
     frees fabric by halving the replica count of the largest resident
     program on the busiest device, and retries — multi-tenant time
     multiplexing of the FU array.
+
+    Shedding is symmetric: every ``Program.release()`` triggers
+    :meth:`reinflate`, which grows shed programs back toward the replica
+    count they were first built at.  Both directions swap the new artifact
+    into the owner's existing Program handle exception-safely, and both are
+    re-stamps of the cached P&R template (no place/route stage runs) when
+    the template path applies.
     """
 
     def __init__(self, devices: Sequence[Device],
@@ -266,6 +285,12 @@ class Scheduler:
         self.cache = cache if cache is not None else JITCache()
         self.contexts: Dict[str, Context] = {
             d.name: Context(d, cache=self.cache) for d in devices}
+        # guards against recursive rebalancing: shedding and re-inflation
+        # both release() programs mid-flight, which must not re-trigger the
+        # release hook
+        self._rebalancing = False
+        for ctx in self.contexts.values():
+            ctx.on_release = self._on_release
 
     @property
     def devices(self) -> List[Device]:
@@ -311,9 +336,6 @@ class Scheduler:
         """Halve the replicas of the largest resident program on the busiest
         device. Returns False when nothing sheddable remains (or the shed
         rebuild itself fails, in which case the victim is restored)."""
-        from repro.core.latency import LatencyError
-        from repro.core.place import PlacementError
-        from repro.core.route import RoutingError
         candidates = [(p, ctx) for ctx in self.contexts.values()
                       for p in ctx.programs
                       if p.compiled.plan.replicas > 1]
@@ -324,26 +346,114 @@ class Scheduler:
                           key=lambda pc: (pc[1].device.fu_used,
                                           pc[0].compiled.plan.fus_used))
         target = max(1, victim.compiled.plan.replicas // 2)
-        source, kw = victim.source, victim.build_kwargs
-        victim.release()
-        try:
-            rebuilt = ctx.build_program(source, max_replicas=target, **kw)
-        except (PlacementError, RoutingError, LatencyError):
-            # rebuild failed (P&R can fail even at fewer replicas): restore
-            # the victim's residency rather than destroying a tenant's
-            # program — its fabric is still free, so the re-debit holds
-            ctx.device.debit(victim.compiled.plan.fus_used,
-                             victim.compiled.plan.io_used)
+        return self._resize(victim, ctx, target, require_growth=False)
+
+    # -------------------------------------------------------- re-inflation
+    def _on_release(self, _prog: Program) -> None:
+        """Release hook: freed fabric is an opportunity to grow shed
+        programs back toward their planned replica count."""
+        if not self._rebalancing:
+            self.reinflate()
+
+    def reinflate(self) -> int:
+        """Re-stamp shed programs back toward their planned replica counts
+        (ROADMAP open item).  With the P&R template cached, each growth is a
+        re-stamp — no place/route stage runs.  Returns programs grown."""
+        grown = 0
+        while self._reinflate_one():
+            grown += 1
+        return grown
+
+    def _reinflate_one(self) -> bool:
+        candidates = [(p, ctx) for ctx in self.contexts.values()
+                      for p in ctx.programs
+                      if p.planned_replicas > p.compiled.plan.replicas
+                      and self._growth_fits(p, ctx)]
+        # most-shed first, so the worst-degraded tenant recovers first
+        candidates.sort(key=lambda pc: (pc[0].planned_replicas -
+                                        pc[0].compiled.plan.replicas),
+                        reverse=True)
+        for victim, ctx in candidates:
+            if self._resize(victim, ctx, victim.planned_replicas,
+                            require_growth=True):
+                return True
+        return False
+
+    @staticmethod
+    def _growth_fits(p: Program, ctx: Context) -> bool:
+        """Cheap pre-check: could ``p`` rebuild at even one more replica once
+        its own fabric is freed?  Skips the speculative release/recompile/
+        restore cycle for hopeless candidates (each would otherwise cost a
+        full P&R when the template path doesn't apply).  A candidate whose
+        last growth attempt failed (e.g. P&R congestion despite a fitting
+        ledger) is retried only once MORE fabric is free than back then."""
+        plan, fug = p.compiled.plan, p.compiled.fug
+        free_fus = ctx.device.fu_free + plan.fus_used
+        free_io = ctx.device.io_free + plan.io_used
+        if (plan.replicas + 1) * fug.n_fus > free_fus or \
+                (plan.replicas + 1) * fug.n_io > free_io:
+            return False
+        if p.grow_failed_free is not None and \
+                ctx.device.fu_free <= p.grow_failed_free[0] and \
+                ctx.device.io_free <= p.grow_failed_free[1]:
+            return False
+        return True
+
+    def _resize(self, victim: Program, ctx: Context, target: int,
+                require_growth: bool) -> bool:
+        """Rebuild ``victim`` at ``max_replicas=target`` and swap the new
+        artifact into the owner's handle, exception-safely: on any failure
+        (or, for re-inflation, no actual growth) the victim's residency and
+        ledger debit are restored unchanged."""
+        from repro.core.latency import LatencyError
+        from repro.core.place import PlacementError
+        from repro.core.route import RoutingError
+        old = victim.compiled
+        prev = self._rebalancing
+        self._rebalancing = True
+
+        def restore() -> None:
+            # restore the victim's residency rather than destroying a
+            # tenant's program — its fabric is free again at this point, so
+            # the re-debit holds
+            ctx.device.debit(old.plan.fus_used, old.plan.io_used)
             victim.released = False
             ctx.programs.append(victim)
-            return False
-        # swap the smaller artifact into the victim in place: handles the
-        # owner already holds stay valid and resident
-        victim.compiled = rebuilt.compiled
-        victim.build_ms = rebuilt.build_ms
-        victim.released = False
-        ctx.programs[ctx.programs.index(rebuilt)] = victim
-        return True
+
+        try:
+            victim.release()
+            rebuilt: Optional[Program] = None
+            try:
+                rebuilt = ctx.build_program(victim.source,
+                                            max_replicas=target,
+                                            **victim.build_kwargs)
+            except (PlacementError, RoutingError, LatencyError):
+                pass
+            except BaseException:
+                # unexpected rebuild failure must still restore the tenant
+                # before propagating (the failed build debited nothing)
+                restore()
+                raise
+            if rebuilt is None or (require_growth and
+                                   rebuilt.compiled.plan.replicas <=
+                                   old.plan.replicas):
+                if rebuilt is not None:   # too-small rebuild: free it first
+                    rebuilt.release()
+                restore()
+                if require_growth:
+                    victim.grow_failed_free = (ctx.device.fu_free,
+                                               ctx.device.io_free)
+                return False
+            # swap the artifact into the victim in place: handles the owner
+            # already holds stay valid and resident
+            victim.compiled = rebuilt.compiled
+            victim.build_ms = rebuilt.build_ms
+            victim.released = False
+            victim.grow_failed_free = None
+            ctx.programs[ctx.programs.index(rebuilt)] = victim
+            return True
+        finally:
+            self._rebalancing = prev
 
     # ----------------------------------------------------------- inspection
     def ledger(self) -> Dict[str, Dict[str, int]]:

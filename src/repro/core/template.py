@@ -1,0 +1,357 @@
+"""Template-stamped place & route: O(one replica) P&R for R replicas.
+
+The paper's replicas are identical by construction (§III-C/D): the compiler
+replicates one kernel DFG, so the R mapped copies differ only in *where* they
+sit on the fabric.  The joint annealer ignored that and re-annealed all R
+copies (O(R) moves, O(R) routing); this module exploits it:
+
+  1. **Template build** (:func:`build_template`): anneal ONE replica into a
+     compact ``w × h`` tile region anchored at the north-west corner of the
+     overlay, with its kernel I/O pinned to the north perimeter pads above
+     the region, route it with PathFinder on a *strip-local* routing graph
+     (routes provably cannot leave the region), and latency-balance it.
+
+  2. **Stamping** (:func:`stamp`): emit R transformed copies of the template.
+     A stamp slot is (column offset ``dx``, band index ``j``, side).  The
+     transform is a horizontal translation plus, for south-side slots, a
+     vertical mirror, plus — for bands deeper than the perimeter — a straight
+     vertical "trunk" splice that extends every I/O route from the band's
+     perimeter pad through the shallower bands' rows.
+
+**Stamp legality argument.**  The overlay's channel graph is vertex-transitive
+over interior tiles: every tile edge is a channel bundle of identical capacity
+``channel_width`` and every perimeter tile carries the same IO pads, so a
+legal route translated horizontally by a multiple of the region width, or
+mirrored about the horizontal midline (which swaps N↔S channel directions of
+equal capacity), is again a legal route over distinct resources — provided no
+two stamps share a channel.  Stamps occupy pairwise-disjoint tile regions, and
+strip-local routing confines each stamp's non-trunk segments to its own
+region, so the only shared resources are (a) perimeter pads above/below a
+column and (b) vertical channels crossed by trunks of deeper bands.  Both are
+counted exactly at template-build time (:func:`_verify_slots`): a candidate
+slot is accepted only if adding its edge multiset and pad multiset keeps every
+channel bundle within ``channel_width`` and every pad coordinate within
+``io_per_edge_tile``.  Accepted slots are ordered shallow-first, so the edge
+usage of any prefix of the slot list is a sub-multiset of the verified total —
+which is why :func:`stamp` needs no verification at all: stamping R ≤
+capacity replicas is legal by construction.
+
+Latency composes in closed form: a trunk of length ``T = band·h`` adds ``T``
+hops to every input route and ``T`` hops to every output route of that stamp,
+shifting every FU-ready time by ``T`` and every output-arrival by ``2T``
+uniformly — so the template's delay-chain settings are reused unchanged and
+the per-stamp ready/arrival tables are the template's plus a constant.
+``tests/test_template.py`` asserts this equals re-running the latency stage.
+
+Templates are cached in :class:`repro.core.cache.JITCache` keyed on
+(DFG fingerprint, OverlaySpec, seed, effort) — independent of the
+free-resource snapshot — so a replica-count change (congestion shedding,
+scheduler shedding, re-inflation) re-stamps in ~a millisecond instead of
+re-running P&R.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.fuse import FUGraph
+from repro.core.latency import LatencyAssignment, LatencyError, balance
+from repro.core.overlay import Coord, OverlaySpec, RoutingGraph
+from repro.core.place import (Placement, PlacementError, anneal_single)
+from repro.core.route import RoutedNet, RoutingError, RoutingResult, route
+
+
+class TemplateError(PlacementError):
+    """No feasible template region / no stampable slot on this overlay.
+
+    Subclasses :class:`~repro.core.place.PlacementError` so that forced
+    ``pr_mode="template"`` failures honour ``jit_compile``'s documented
+    mapping-failure contract (callers catch PlacementError/RoutingError/
+    LatencyError — e.g. the Scheduler's shed/probe loops)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """One stamp position: region origin column, band depth, and side."""
+    dx: int          # horizontal tile offset (multiple of the region width)
+    band: int        # 0 = at the perimeter; trunk length = band * h
+    south: bool      # mirrored copy anchored to the south edge
+
+
+# one multi-terminal net in the template frame:
+#   ((skind, src_id), [(dkind, dst_id, port, path), ...])
+TemplateNet = Tuple[Tuple[str, int], List[Tuple[str, int, int, List[Coord]]]]
+
+
+@dataclasses.dataclass
+class Template:
+    """A routed, latency-balanced single replica plus its verified slots."""
+    spec: OverlaySpec
+    w: int                         # region width  (tiles)
+    h: int                         # region height (tiles)
+    fu_pos: Dict[int, Coord]       # sid -> tile, template frame
+    in_pos: Dict[int, Coord]       # invar idx -> north pad, template frame
+    out_pos: Dict[int, Coord]      # outvar idx -> north pad, template frame
+    nets: List[TemplateNet]
+    latency: LatencyAssignment     # replica-0 frame
+    cost: float
+    moves: int
+    iterations: int
+    slots: List[Slot]              # verified, shallow-first
+    slot_wirelength: List[int]     # tree segments per slot (trunks included)
+    build_ms: Dict[str, float]     # place / route / latency stage times
+
+    @property
+    def capacity(self) -> int:
+        return len(self.slots)
+
+
+# -------------------------------------------------------------- region shape
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // max(1, b))
+
+
+def region_shape(fug: FUGraph, spec: OverlaySpec) -> Tuple[int, int]:
+    """Minimal region (w, h): enough tiles for the FUs and enough north pads
+    above the region for the kernel I/O."""
+    w = max(1, _ceil_div(fug.n_io, spec.io_per_edge_tile),
+            _ceil_div(fug.n_fus, spec.height))
+    h = max(1, _ceil_div(fug.n_fus, w))
+    return w, h
+
+
+def _enumerate_slots(spec: OverlaySpec, w: int, h: int,
+                     pads_per_coord: int) -> List[Slot]:
+    """Geometric slot candidates, shallow-first (minimal trunks first)."""
+    cols = spec.width // w
+    v = spec.height // h                      # bands per column, both sides
+    nb, sb = (v + 1) // 2, v // 2
+    if pads_per_coord > 0:
+        by_pads = spec.io_per_edge_tile // pads_per_coord
+        nb, sb = min(nb, by_pads), min(sb, by_pads)
+    slots: List[Slot] = []
+    for j in range(max(nb, sb, 0)):
+        for south in (False, True):
+            if j >= (sb if south else nb):
+                continue
+            for i in range(cols):
+                slots.append(Slot(i * w, j, south))
+    return slots
+
+
+def estimate_capacity(fug: FUGraph, spec: OverlaySpec) -> int:
+    """Optimistic stamp capacity at the minimal region (assumes even pad
+    spread); the exact number is :attr:`Template.capacity` after building."""
+    w, h = region_shape(fug, spec)
+    if w > spec.width or h > spec.height:
+        return 0
+    return len(_enumerate_slots(spec, w, h, _ceil_div(fug.n_io, w)))
+
+
+# ---------------------------------------------------------- coord transforms
+
+def _tx_coord(c: Coord, slot: Slot, spec: OverlaySpec, h: int) -> Coord:
+    x, y = c
+    if y == -1:                                   # north pad
+        return (x + slot.dx, spec.height if slot.south else -1)
+    yt = y + slot.band * h
+    return (x + slot.dx, spec.height - 1 - yt if slot.south else yt)
+
+
+def _trunk(x: int, slot: Slot, spec: OverlaySpec, h: int) -> List[Coord]:
+    """Tiles between the slot's perimeter pad and its region, pad-first."""
+    t = slot.band * h
+    ys = [spec.height - 1 - k for k in range(t)] if slot.south else \
+        list(range(t))
+    return [(x, y) for y in ys]
+
+
+def _tx_path(path: List[Coord], slot: Slot, spec: OverlaySpec,
+             h: int) -> List[Coord]:
+    pts = [_tx_coord(p, slot, spec, h) for p in path]
+    if slot.band == 0 or len(path) < 2:
+        return pts
+    if path[0][1] == -1:                          # route starts at a pad
+        pts = [pts[0]] + _trunk(pts[0][0], slot, spec, h) + pts[1:]
+    if path[-1][1] == -1:                         # route ends at a pad
+        tr = _trunk(pts[-1][0], slot, spec, h)
+        tr.reverse()
+        pts = pts[:-1] + tr + [pts[-1]]
+    return pts
+
+
+def _slot_edge_multiset(tmpl_nets: Sequence[TemplateNet], slot: Slot,
+                        spec: OverlaySpec, h: int) -> Counter:
+    """Channel-bundle usage of one stamp: tree edges counted once per net
+    (fanout of one source shares wires, as in PathFinder's accounting)."""
+    usage: Counter = Counter()
+    for _src, sinks in tmpl_nets:
+        edges = set()
+        for _dk, _di, _port, path in sinks:
+            tp = _tx_path(path, slot, spec, h)
+            edges.update(zip(tp, tp[1:]))
+        usage.update(edges)
+    return usage
+
+
+# ----------------------------------------------------------------- building
+
+def _strip_graph(spec: OverlaySpec, w: int, h: int) -> RoutingGraph:
+    """Fabric routing graph restricted to the template region + its pads."""
+    rg = RoutingGraph(spec)
+    allowed = {(x, y) for x in range(w) for y in range(h)}
+    allowed |= {(x, -1) for x in range(w)}
+    rg.adj = {n: [m for m in nbrs if m in allowed]
+              for n, nbrs in rg.adj.items() if n in allowed}
+    rg.capacity = {e: c for e, c in rg.capacity.items()
+                   if e[0] in allowed and e[1] in allowed}
+    return rg
+
+
+def _verify_slots(tmpl_nets: Sequence[TemplateNet], pads: Sequence[Coord],
+                  candidates: Sequence[Slot], spec: OverlaySpec,
+                  h: int) -> Tuple[List[Slot], List[int]]:
+    """Accept candidate slots greedily (shallow-first) while total channel
+    usage and pad multiplicity stay within capacity."""
+    cap = RoutingGraph(spec).capacity
+    usage: Counter = Counter()
+    pad_cnt: Counter = Counter()
+    accepted: List[Slot] = []
+    wirelengths: List[int] = []
+    for slot in candidates:
+        edges = _slot_edge_multiset(tmpl_nets, slot, spec, h)
+        slot_pads = Counter(_tx_coord(p, slot, spec, h) for p in pads)
+        if any(e not in cap or usage[e] + n > cap[e]
+               for e, n in edges.items()):
+            continue
+        if any(pad_cnt[c] + n > spec.io_per_edge_tile
+               for c, n in slot_pads.items()):
+            continue
+        usage.update(edges)
+        pad_cnt.update(slot_pads)
+        accepted.append(slot)
+        wirelengths.append(sum(edges.values()))
+    return accepted, wirelengths
+
+
+def _region_candidates(fug: FUGraph, spec: OverlaySpec,
+                       limit: int = 8) -> List[Tuple[int, int]]:
+    w0, _h0 = region_shape(fug, spec)
+    out: List[Tuple[int, int]] = []
+    for w in range(w0, spec.width + 1):
+        hmin = max(1, _ceil_div(fug.n_fus, w))
+        for h in range(hmin, min(hmin + 2, spec.height) + 1):
+            if h <= spec.height and (w, h) not in out:
+                out.append((w, h))
+            if len(out) >= limit:
+                return out
+    return out
+
+
+def build_template(fug: FUGraph, spec: OverlaySpec, seed: int = 0,
+                   effort: float = 1.0) -> Template:
+    """Place, route and latency-balance one replica in the smallest feasible
+    region, then enumerate + verify its stamp slots.  Raises
+    :class:`TemplateError` when no region maps (caller falls back to the
+    joint annealer)."""
+    last_err: Optional[Exception] = None
+    for w, h in _region_candidates(fug, spec):
+        tiles = [(x, y) for y in range(h) for x in range(w)]
+        pads = [(x, -1) for x in range(w)
+                for _ in range(spec.io_per_edge_tile)]
+        try:
+            t0 = time.perf_counter()
+            sp = anneal_single(fug, tiles, pads, seed=seed, effort=effort)
+            place_ms = (time.perf_counter() - t0) * 1e3
+            placement = sp.as_placement()
+            t0 = time.perf_counter()
+            routing = route(fug, spec, placement, replicas=1,
+                            rg=_strip_graph(spec, w, h))
+            route_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            lat = balance(fug, spec, routing)
+            lat_ms = (time.perf_counter() - t0) * 1e3
+        except (PlacementError, RoutingError, LatencyError) as e:
+            last_err = e
+            continue
+        nets = _group_nets(routing.nets)
+        pad_coords = list(sp.in_pos.values()) + list(sp.out_pos.values())
+        pads_per_coord = max(Counter(pad_coords).values(), default=0)
+        candidates = _enumerate_slots(spec, w, h, pads_per_coord)
+        slots, wls = _verify_slots(nets, pad_coords, candidates, spec, h)
+        if not slots:
+            last_err = TemplateError(
+                f"region {w}x{h} routed but produced no legal stamp slot")
+            continue
+        return Template(spec, w, h, sp.fu_pos, sp.in_pos, sp.out_pos, nets,
+                        lat, sp.cost, sp.moves, routing.iterations, slots,
+                        wls, dict(place=place_ms, route=route_ms,
+                                  latency=lat_ms))
+    raise TemplateError(f"no feasible template region on "
+                        f"{spec.width}x{spec.height}: {last_err}")
+
+
+def _group_nets(nets: Sequence[RoutedNet]) -> List[TemplateNet]:
+    grouped: Dict[Tuple[str, int], List] = {}
+    for n in nets:
+        grouped.setdefault((n.skind, n.src[1]), []).append(
+            (n.dkind, n.dst[1], n.port, n.path))
+    return sorted(grouped.items())
+
+
+# ----------------------------------------------------------------- stamping
+
+def stamp(tmpl: Template, spec: OverlaySpec, replicas: int
+          ) -> Tuple[Placement, RoutingResult, LatencyAssignment]:
+    """Compose the full P&R artifact for ``replicas`` copies by transforming
+    the template — pure translation/mirror/trunk-splice, no annealing, no
+    routing, no balancing."""
+    if not 1 <= replicas <= tmpl.capacity:
+        raise TemplateError(
+            f"requested {replicas} stamps, template capacity "
+            f"{tmpl.capacity}")
+    fu_pos: Dict[Tuple[int, int], Coord] = {}
+    in_pos: Dict[Tuple[int, int], Coord] = {}
+    out_pos: Dict[Tuple[int, int], Coord] = {}
+    nets: List[RoutedNet] = []
+    usage: Counter = Counter()
+    delays: Dict[Tuple[int, int, int], int] = {}
+    ready: Dict[Tuple[int, int], int] = {}
+    out_ready: Dict[Tuple[int, int], int] = {}
+    nid = 0
+    for r, slot in enumerate(tmpl.slots[:replicas]):
+        t = slot.band * tmpl.h
+        for sid, c in tmpl.fu_pos.items():
+            fu_pos[(r, sid)] = _tx_coord(c, slot, spec, tmpl.h)
+        for i, c in tmpl.in_pos.items():
+            in_pos[(r, i)] = _tx_coord(c, slot, spec, tmpl.h)
+        for i, c in tmpl.out_pos.items():
+            out_pos[(r, i)] = _tx_coord(c, slot, spec, tmpl.h)
+        for (skind, src), sinks in tmpl.nets:
+            edges = set()
+            for dkind, did, port, path in sinks:
+                tp = _tx_path(path, slot, spec, tmpl.h)
+                nets.append(RoutedNet(nid, skind, (r, src), dkind, (r, did),
+                                      port, tp))
+                nid += 1
+                edges.update(zip(tp, tp[1:]))
+            usage.update(edges)
+        for (_z, sid, port), d in tmpl.latency.delays.items():
+            delays[(r, sid, port)] = d
+        for (_z, sid), v in tmpl.latency.ready.items():
+            ready[(r, sid)] = v + t
+        for (_z, oi), v in tmpl.latency.out_ready.items():
+            out_ready[(r, oi)] = v + 2 * t
+    placement = Placement(fu_pos, in_pos, out_pos,
+                          tmpl.cost * replicas, tmpl.moves)
+    routing = RoutingResult(nets, tmpl.iterations,
+                            max(usage.values(), default=0),
+                            sum(tmpl.slot_wirelength[:replicas]))
+    lat = LatencyAssignment(delays, ready, out_ready,
+                            max(out_ready.values(), default=0),
+                            tmpl.latency.max_delay_used)
+    return placement, routing, lat
