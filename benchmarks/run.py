@@ -7,7 +7,8 @@
   overlay_exec_perf   → executor micro-benchmark
   model_step          → per-arch reduced train-step wall time
   roofline_report     → §Roofline table from the dry-run artifacts
-  template_build_perf → template-stamp vs joint-anneal cold builds
+  template_build_perf → template-stamp vs joint-anneal cold builds + fill
+  persistent_cache_perf → cross-process disk-cache restart simulation
 
 Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
 writes the same rows as machine-readable JSON (one object per row with
@@ -22,7 +23,8 @@ import json
 import sys
 
 from benchmarks import (model_step, overlay_exec_perf, par_time,
-                        reconfig_time, replication_scaling, resource_table,
+                        persistent_cache_perf, reconfig_time,
+                        replication_scaling, resource_table,
                         roofline_report, template_build_perf)
 
 SUITES = {
@@ -34,6 +36,7 @@ SUITES = {
     "model_step": model_step.run,
     "roofline_report": roofline_report.run,
     "template_build_perf": template_build_perf.run,
+    "persistent_cache_perf": persistent_cache_perf.run,
 }
 
 

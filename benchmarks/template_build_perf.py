@@ -1,4 +1,5 @@
-"""Template-stamp vs joint-anneal cold-build latency (ISSUE 2 acceptance).
+"""Template-stamp vs joint-anneal cold-build latency and replica-fill parity
+(ISSUE 2/3 acceptance).
 
 For each kernel × replica count, measures three cold-to-warm rungs:
 
@@ -11,11 +12,17 @@ For each kernel × replica count, measures three cold-to-warm rungs:
                       never run — only the stamp (this is what congestion
                       shedding, scheduler shedding and re-inflation pay).
 
+A second section measures UNCAPPED fill parity (ISSUE 3): for each kernel,
+``pr_mode="auto"`` (four-edge stamping + gap fill) must stay on the template
+fast path — never running a joint-anneal stage — while reaching >= 95 % of
+the replica fill the joint annealer achieves on the same spec.
+
 Acceptance: cold template builds >= 5x faster than joint at R >= 8 (the CI
-smoke gate is 3x for noise headroom on shared runners).
+smoke gate is 3x for noise headroom on shared runners), fill parity >= 0.95
+with the joint path never invoked.
 
     PYTHONPATH=src python benchmarks/template_build_perf.py \
-        [--smoke] [--json BENCH_compile.json] [--gate 3.0]
+        [--smoke] [--json BENCH_compile.json] [--gate 3.0] [--fill-gate 0.95]
 """
 
 from __future__ import annotations
@@ -32,6 +39,9 @@ from repro.core.jit import jit_compile
 from repro.core.overlay import OverlaySpec
 
 SPEC = OverlaySpec(width=32, height=8, dsp_per_fu=2)
+# the serving config for the fill-parity section: 4 pads per perimeter tile,
+# so deep stamp bands are legal and the fill fight is at maximum occupancy
+FILL_SPEC = OverlaySpec(width=32, height=8, dsp_per_fu=2, io_per_edge_tile=4)
 KERNELS = ("chebyshev", "mibench", "qspline", "sgfilter")
 REPLICAS = (1, 2, 4, 8, 16)
 SMOKE_KERNELS = ("chebyshev", "sgfilter")
@@ -104,6 +114,54 @@ def check_gate(rows: List[Dict], gate: float) -> List[str]:
     return failures
 
 
+def fill_bench(kernels=KERNELS, spec=FILL_SPEC) -> List[Dict]:
+    """Uncapped replica-fill parity: auto (four-edge stamp + gap fill) vs
+    the joint annealer, both given the whole overlay."""
+    rows = []
+    for name in kernels:
+        src = BENCHMARKS[name][0]
+        gc.collect()
+        t0 = time.perf_counter()
+        ck_a = jit_compile(src, spec)                     # auto, no cache
+        auto_ms = (time.perf_counter() - t0) * 1e3
+        gc.collect()
+        t0 = time.perf_counter()
+        ck_j = jit_compile(src, spec, pr_mode="joint")
+        joint_ms = (time.perf_counter() - t0) * 1e3
+        never_joint = (ck_a.pr_path == "template" and
+                       "joint_probe" not in ck_a.stage_times_ms and
+                       "template_probe" not in ck_a.stage_times_ms)
+        rows.append(dict(
+            kernel=name,
+            auto_replicas=ck_a.plan.replicas,
+            joint_replicas=ck_j.plan.replicas,
+            fill_ratio=round(ck_a.plan.replicas /
+                             max(1, ck_j.plan.replicas), 3),
+            auto_never_joint=never_joint,
+            auto_ms=round(auto_ms, 3),
+            joint_ms=round(joint_ms, 3),
+            speedup=round(joint_ms / max(auto_ms, 1e-9), 1),
+            infill_ms=round(ck_a.stage_times_ms.get("infill", 0.0), 3),
+        ))
+    return rows
+
+
+def check_fill_gate(rows: List[Dict], gate: float) -> List[str]:
+    """Every kernel: auto must stay on the template fast path (no joint
+    stage ever runs) AND reach >= gate of the joint annealer's fill."""
+    failures = []
+    for row in rows:
+        if not row["auto_never_joint"]:
+            failures.append(f"{row['kernel']}: auto invoked the joint "
+                            f"annealer")
+        if row["fill_ratio"] < gate:
+            failures.append(
+                f"{row['kernel']}: auto fill {row['auto_replicas']} is only "
+                f"{row['fill_ratio']} of joint {row['joint_replicas']} "
+                f"(gate {gate})")
+    return failures
+
+
 def run() -> List[Dict]:
     """run.py suite entry point (smoke-sized)."""
     out = []
@@ -117,6 +175,16 @@ def run() -> List[Dict]:
                         f"speedup_cold={row['speedup_cold']}x "
                         f"speedup_stamp={row['speedup_stamp']}x"),
         })
+    for row in fill_bench(SMOKE_KERNELS):
+        out.append({
+            "name": f"template_fill/{row['kernel']}(uncapped)",
+            "us_per_call": row["auto_ms"] * 1e3,
+            "derived": (f"auto R={row['auto_replicas']} "
+                        f"joint R={row['joint_replicas']} "
+                        f"fill={row['fill_ratio']} "
+                        f"never_joint={row['auto_never_joint']} "
+                        f"speedup={row['speedup']}x"),
+        })
     return out
 
 
@@ -127,6 +195,9 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None)
     ap.add_argument("--gate", type=float, default=None,
                     help="fail unless cold template >= GATE x joint at R>=8")
+    ap.add_argument("--fill-gate", type=float, default=None,
+                    help="fail unless uncapped auto fill >= FILL_GATE x "
+                         "joint fill with the joint annealer never invoked")
     args = ap.parse_args()
     kernels = SMOKE_KERNELS if args.smoke else KERNELS
     replicas = SMOKE_REPLICAS if args.smoke else REPLICAS
@@ -142,11 +213,31 @@ def main() -> None:
               f"{r['template_stamp_ms']:>7.1f}ms "
               f"{r['speedup_cold']:>6.1f}x {r['speedup_stamp']:>7.1f}x")
 
+    fill_rows = fill_bench(kernels)
+    hdr = (f"{'kernel':<10} {'auto R':>7} {'joint R':>8} {'fill':>6} "
+           f"{'no-joint':>8} {'auto':>9} {'joint':>9} {'speedup':>8}")
+    print()
+    print(hdr)
+    print("-" * len(hdr))
+    for r in fill_rows:
+        print(f"{r['kernel']:<10} {r['auto_replicas']:>7} "
+              f"{r['joint_replicas']:>8} {r['fill_ratio']:>6} "
+              f"{str(r['auto_never_joint']):>8} {r['auto_ms']:>7.1f}ms "
+              f"{r['joint_ms']:>7.1f}ms {r['speedup']:>7.1f}x")
+
     failures = check_gate(rows, args.gate) if args.gate else []
+    if args.fill_gate:
+        failures += check_fill_gate(fill_rows, args.fill_gate)
     out = dict(spec=dict(width=SPEC.width, height=SPEC.height,
                          dsp_per_fu=SPEC.dsp_per_fu,
                          channel_width=SPEC.channel_width),
-               gate=args.gate, gate_failures=failures, rows=rows)
+               gate=args.gate, gate_failures=failures, rows=rows,
+               fill=dict(spec=dict(width=FILL_SPEC.width,
+                                   height=FILL_SPEC.height,
+                                   dsp_per_fu=FILL_SPEC.dsp_per_fu,
+                                   channel_width=FILL_SPEC.channel_width,
+                                   io_per_edge_tile=FILL_SPEC.io_per_edge_tile),
+                         gate=args.fill_gate, rows=fill_rows))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
@@ -157,6 +248,9 @@ def main() -> None:
         raise SystemExit(1)
     if args.gate:
         print(f"gate PASS: cold template >= {args.gate}x joint at R>=8")
+    if args.fill_gate:
+        print(f"gate PASS: uncapped auto fill >= {args.fill_gate} of joint "
+              f"with no joint stage run")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,13 @@ class Bitstream:
         """Config-load time at the paper's ~25 MB/s AXI config rate."""
         return self.n_bytes / bw_mbps
 
+    def sha256(self) -> str:
+        """Content hash of the packed configuration — the disk-cache tests
+        and the restart benchmark use it to assert a warm-loaded artifact
+        is bit-for-bit the one that was persisted."""
+        import hashlib
+        return hashlib.sha256(self.data).hexdigest()
+
     def __repr__(self) -> str:
         return (f"Bitstream({self.n_bytes} bytes for "
                 f"{self.spec.width}x{self.spec.height} overlay)")

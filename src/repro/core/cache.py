@@ -12,21 +12,41 @@ content hash of everything that can change the produced configuration:
     identical code but different closure constants hash differently — the
     constants surface as DFG immediates);
   * the :class:`~repro.core.overlay.OverlaySpec` (all geometry/FU fields);
-  * the **free-resource snapshot** (free FUs, free IO) the build compiles
-    against — a build made when the overlay was empty must not be reused when
-    half the fabric is occupied, because the replication factor would be
-    stale;
-  * the replication knobs (``max_replicas``, ``seed``, ``place_effort``).
+  * the **effective replica cap** the free-resource snapshot implies — NOT
+    the raw (free FUs, free IO) numbers.  The compiler consumes the snapshot
+    only through :func:`~repro.core.replicate.plan_replication`, so two
+    snapshots that yield the same plan yield bit-identical artifacts;
+    hashing the raw numbers (as the first cache generation did) fragmented
+    a busy fleet's entries across every transient occupancy level and the
+    cache almost never hit.  A build made when the overlay was empty is
+    still never reused once the cap changes — the plan changes with it;
+  * the replication knobs (``max_replicas``, ``seed``, ``place_effort``)
+    and the P&R mode knobs (``pr_mode``, ``min_template_fill``).
 
 Eviction is LRU with a configurable capacity; hit/miss/eviction counters feed
 the serving dashboards (``benchmarks/jit_cache_perf.py``).
+
+Two tiers sit below the in-memory LRU:
+
+  * a **stage-level template store** (:func:`make_template_key`) — a P&R
+    template hit on a full-key miss means the build skips place/route/
+    latency entirely and only re-stamps;
+  * an optional **content-addressed on-disk store** (:class:`DiskCache`,
+    enabled via ``JITCache(persist_dir=...)``) that write-throughs every
+    artifact and warm-loads them after a process restart — the paper's
+    run-time-compile claim extended across server restarts
+    (``benchmarks/persistent_cache_perf.py``: warm ≳ 50× faster than cold).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import pickle
+import struct
 from collections import OrderedDict
+from pathlib import Path
 from typing import Any, Callable, Iterable, Optional, Tuple, Union
 
 from repro.core.dfg import DFG
@@ -87,12 +107,39 @@ def make_cache_key(kernel: Union[str, Callable, DFG],
                    max_replicas: Optional[int] = None,
                    seed: int = 0,
                    place_effort: float = 1.0,
-                   pr_mode: str = "auto") -> CacheKey:
-    """The full key: kernel content × overlay × free-resource snapshot ×
-    replication knobs × P&R mode."""
+                   pr_mode: str = "auto",
+                   min_template_fill: Optional[float] = None,
+                   fug=None) -> CacheKey:
+    """The full key: kernel content × overlay × *normalized* free-resource
+    snapshot × replication knobs × P&R mode.
+
+    The snapshot is normalized to the replication plan it implies (the
+    effective replica cap plus its limiting resource): ``jit_compile``
+    consumes ``free_fus``/``free_io`` only through ``plan_replication``, so
+    any two snapshots producing the same plan produce the same artifact and
+    must share one entry.  On a busy fleet this turns near-certain misses
+    (every transient FU count was its own key) into hits whenever occupancy
+    moves less than one replica's footprint.
+
+    ``fug`` optionally passes the caller's already-fused FU graph so the
+    normalization doesn't re-lower the kernel (``jit_compile`` does this);
+    otherwise the kernel is lowered and fused here.
+    """
+    from repro.core.replicate import plan_replication
     kf = kernel_fingerprint(kernel, n_inputs=n_inputs, name=name)
-    ctx = (f"{spec_fingerprint(spec)}:{free_fus}:{free_io}:"
-           f"{max_replicas}:{seed}:{place_effort:g}:{pr_mode}")
+    if fug is None:
+        from repro.core.fuse import to_fu_graph
+        from repro.core.jit import lower_to_dfg
+        g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+        fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
+    plan = plan_replication(fug, spec, max_replicas=max_replicas,
+                            fu_headroom=spec.n_fus - free_fus,
+                            io_headroom=spec.n_io - free_io)
+    if min_template_fill is None:
+        from repro.core.jit import DEFAULT_MIN_TEMPLATE_FILL
+        min_template_fill = DEFAULT_MIN_TEMPLATE_FILL
+    ctx = (f"{spec_fingerprint(spec)}:r{plan.replicas}:{plan.limited_by}:"
+           f"{seed}:{place_effort:g}:{pr_mode}:{min_template_fill:g}")
     return f"{kf}@{hashlib.sha256(ctx.encode()).hexdigest()[:16]}"
 
 
@@ -107,6 +154,119 @@ def make_template_key(g: DFG, spec: OverlaySpec, seed: int = 0,
     recompile."""
     return (f"tpl:{dfg_fingerprint(g)}@{spec_fingerprint(spec)[:16]}:"
             f"{seed}:{place_effort:g}")
+
+
+# --------------------------------------------------------------- disk tier
+
+class DiskCache:
+    """Content-addressed on-disk artifact store (one file per cache key).
+
+    Artifacts (``CompiledKernel``, ``Template`` — anything picklable) are
+    stored under ``root/<sha2>/<sha>.bin`` as::
+
+        MAGIC(4) | version(u16) | key_len(u32) | key | sha256(payload) | payload
+
+    Guarantees:
+
+      * **atomic writes** — payloads land in a ``.tmp`` sibling and are
+        ``os.replace``d into place, so a crashed writer never leaves a
+        half-written entry visible;
+      * **corruption quarantine** — any unreadable entry (bad magic, short
+        header, checksum mismatch, unpicklable payload) is renamed to
+        ``*.corrupt`` and treated as a miss, never crashed on;
+      * **version invalidation** — entries written by an older
+        ``SCHEMA_VERSION`` (or whose embedded key doesn't match, i.e. a
+        filename collision) are silently removed and recompiled.
+
+    The store is best-effort: I/O errors on write are counted
+    (``write_errors``) but never raised — a full disk must not take down
+    the serving path.  Entries are trusted pickles; point ``root`` only at
+    a directory the serving user owns.
+    """
+
+    MAGIC = b"OVJC"
+    SCHEMA_VERSION = 1
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.writes = 0
+        self.write_errors = 0
+        self.quarantined = 0
+        self.invalidated = 0
+
+    def _path(self, key: CacheKey) -> Path:
+        d = hashlib.sha256(key.encode()).hexdigest()
+        return self.root / d[:2] / f"{d}.bin"
+
+    def get(self, key: CacheKey):
+        p = self._path(key)
+        try:
+            blob = p.read_bytes()
+        except OSError:
+            self.misses += 1
+            return None
+        try:
+            if blob[:4] != self.MAGIC or len(blob) < 10:
+                raise ValueError("bad magic")
+            ver, klen = struct.unpack_from("<HI", blob, 4)
+            off = 10
+            if len(blob) < off + klen + 32:
+                raise ValueError("truncated header")
+            stored_key = blob[off:off + klen].decode()
+            off += klen
+            digest = blob[off:off + 32]
+            payload = blob[off + 32:]
+            if ver != self.SCHEMA_VERSION or stored_key != key:
+                # stale schema or filename collision: not corruption —
+                # drop the entry and recompile
+                self.invalidated += 1
+                p.unlink(missing_ok=True)
+                self.misses += 1
+                return None
+            if hashlib.sha256(payload).digest() != digest:
+                raise ValueError("checksum mismatch")
+            obj = pickle.loads(payload)
+        except Exception:
+            self._quarantine(p)
+            self.misses += 1
+            return None
+        self.hits += 1
+        return obj
+
+    def put(self, key: CacheKey, obj) -> None:
+        tmp: Optional[Path] = None
+        try:
+            payload = pickle.dumps(obj, protocol=4)
+            kb = key.encode()
+            blob = (self.MAGIC +
+                    struct.pack("<HI", self.SCHEMA_VERSION, len(kb)) + kb +
+                    hashlib.sha256(payload).digest() + payload)
+            p = self._path(key)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            tmp = p.with_name(f"{p.name}.tmp{os.getpid()}")
+            tmp.write_bytes(blob)
+            os.replace(tmp, p)
+            self.writes += 1
+        except Exception:
+            self.write_errors += 1
+            if tmp is not None:        # don't leak partial tmp files
+                try:
+                    tmp.unlink()
+                except OSError:
+                    pass
+
+    def _quarantine(self, p: Path) -> None:
+        try:
+            os.replace(p, p.with_suffix(".corrupt"))
+            self.quarantined += 1
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*/*.bin"))
 
 
 # -------------------------------------------------------------------- cache
@@ -126,6 +286,13 @@ class CacheStats:
     template_hits: int = 0
     template_misses: int = 0
     template_evictions: int = 0
+    # frontend tier (source text -> lowered DFG): a hit skips parse+optimize
+    frontend_hits: int = 0
+    frontend_misses: int = 0
+    # persistent tier: disk_hits count toward `hits` (no compile ran) but
+    # mark that the artifact was warm-loaded from disk, not memory
+    disk_hits: int = 0
+    disk_template_hits: int = 0
 
     @property
     def lookups(self) -> int:
@@ -142,6 +309,10 @@ class CacheStats:
                     template_hits=self.template_hits,
                     template_misses=self.template_misses,
                     template_evictions=self.template_evictions,
+                    frontend_hits=self.frontend_hits,
+                    frontend_misses=self.frontend_misses,
+                    disk_hits=self.disk_hits,
+                    disk_template_hits=self.disk_template_hits,
                     hit_rate=round(self.hit_rate, 4))
 
 
@@ -151,9 +322,16 @@ class JITCache:
     Shared safely between any number of Contexts/Schedulers: entries are
     immutable compile artifacts, and resource accounting happens in the
     runtime ledger, never in the cache.
+
+    With ``persist_dir`` every insertion is written through to a
+    :class:`DiskCache` and every in-memory miss falls back to a disk
+    lookup; a disk hit is promoted back into the LRU.  The disk tier is
+    shared across processes (atomic writes), so a restarted server —
+    or a sibling worker on the same host — warm-starts from it.
     """
 
-    def __init__(self, capacity: int = 128, template_capacity: int = 64):
+    def __init__(self, capacity: int = 128, template_capacity: int = 64,
+                 persist_dir: Optional[Union[str, Path]] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if template_capacity < 1:
@@ -162,6 +340,10 @@ class JITCache:
         self.template_capacity = template_capacity
         self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
         self._templates: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._frontends: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._frontend_capacity = max(256, capacity)
+        self.disk: Optional[DiskCache] = \
+            DiskCache(persist_dir) if persist_dir is not None else None
         self.stats = CacheStats()
 
     # ------------------------------------------------------------- protocol
@@ -178,8 +360,14 @@ class JITCache:
     # -------------------------------------------------------------- lookups
     def get(self, key: CacheKey):
         """Return the cached CompiledKernel or None; counts hit/miss and
-        refreshes recency on hit."""
+        refreshes recency on hit.  Falls back to (and promotes from) the
+        disk tier when one is configured."""
         entry = self._entries.get(key)
+        if entry is None and self.disk is not None:
+            entry = self.disk.get(key)
+            if entry is not None:
+                self.stats.disk_hits += 1
+                self._insert(self._entries, key, entry, self.capacity)
         if entry is None:
             self.stats.misses += 1
             return None
@@ -188,18 +376,32 @@ class JITCache:
         return entry
 
     def put(self, key: CacheKey, ck) -> None:
-        self._entries[key] = ck
-        self._entries.move_to_end(key)
+        self._insert(self._entries, key, ck, self.capacity)
         self.stats.insertions += 1
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
+        if self.disk is not None:
+            self.disk.put(key, ck)
+
+    def _insert(self, table, key: CacheKey, obj, capacity: int) -> None:
+        table[key] = obj
+        table.move_to_end(key)
+        while len(table) > capacity:
+            table.popitem(last=False)
+            if table is self._entries:
+                self.stats.evictions += 1
+            elif table is self._templates:
+                self.stats.template_evictions += 1
 
     # ------------------------------------------------------------ templates
     def get_template(self, key: CacheKey):
         """Stage-level lookup of a P&R :class:`~repro.core.template.Template`;
         counts template_hits/template_misses and refreshes recency."""
         entry = self._templates.get(key)
+        if entry is None and self.disk is not None:
+            entry = self.disk.get(key)
+            if entry is not None:
+                self.stats.disk_template_hits += 1
+                self._insert(self._templates, key, entry,
+                             self.template_capacity)
         if entry is None:
             self.stats.template_misses += 1
             return None
@@ -208,15 +410,40 @@ class JITCache:
         return entry
 
     def put_template(self, key: CacheKey, tmpl) -> None:
-        self._templates[key] = tmpl
-        self._templates.move_to_end(key)
-        while len(self._templates) > self.template_capacity:
-            self._templates.popitem(last=False)
-            self.stats.template_evictions += 1
+        self._insert(self._templates, key, tmpl, self.template_capacity)
+        if self.disk is not None:
+            self.disk.put(key, tmpl)
+
+    # ------------------------------------------------------------- frontend
+    def get_frontend(self, key: CacheKey):
+        """Lowered-DFG lookup keyed on the raw source fingerprint
+        (:func:`kernel_fingerprint` of the text — computable WITHOUT
+        parsing).  A hit skips the OpenCL parse + optimize pipeline, which
+        is most of what a disk-warm build would otherwise still pay; the
+        DFG is shared read-only across builds (the fuse stage copies)."""
+        g = self._frontends.get(key)
+        if g is None and self.disk is not None:
+            g = self.disk.get(key)
+            if g is not None:
+                self._insert(self._frontends, key, g, self._frontend_capacity)
+        if g is None:
+            self.stats.frontend_misses += 1
+            return None
+        self._frontends.move_to_end(key)
+        self.stats.frontend_hits += 1
+        return g
+
+    def put_frontend(self, key: CacheKey, g) -> None:
+        self._insert(self._frontends, key, g, self._frontend_capacity)
+        if self.disk is not None:
+            self.disk.put(key, g)
 
     def clear(self) -> None:
+        """Drop the in-memory tiers (the disk tier, if any, is retained —
+        it is the restart-survival layer)."""
         self._entries.clear()
         self._templates.clear()
+        self._frontends.clear()
 
     def __repr__(self) -> str:
         return (f"JITCache({len(self)}/{self.capacity} entries, "

@@ -15,23 +15,39 @@ these) and three execution paths:
 
 Two P&R strategies feed the place/route/latency stages (``pr_mode``):
 
-  * ``"template"`` — place & route ONE replica in a compact region and stamp
-    R translated copies (:mod:`repro.core.template`).  P&R cost is O(one
-    replica); with a :class:`~repro.core.cache.JITCache` the template itself
-    is cached on (kernel, spec, seed, effort) — independent of the
-    free-resource snapshot — so replica-count changes skip place/route
-    entirely and only re-stamp (``stage_times_ms["stamp"]``).
+  * ``"template"`` — place & route ONE replica in a compact region, stamp
+    R transformed copies on all four perimeter edges, and grow toward the
+    replication plan with per-replica gap fill (:mod:`repro.core.template`).
+    P&R cost is O(one replica) + O(one replica per remnant); with a
+    :class:`~repro.core.cache.JITCache` the template itself is cached on
+    (kernel, spec, seed, effort) — independent of the free-resource
+    snapshot — so replica-count changes skip place/route entirely and only
+    re-stamp (``stage_times_ms["stamp"]``).
   * ``"joint"``    — the original annealer over all R replicas at once;
-    slower but can pack replicas that the regular stamp grid cannot (it may
-    use all four perimeter edges at once).
-  * ``"auto"``     — the default: template when stamping reaches the planned
-    replica count, joint otherwise, so resource-aware maximal replication is
-    never silently degraded.
+    kept for parity testing and as the last-resort fallback.
+  * ``"auto"``     — the default: the template path, unless it cannot reach
+    ``min_template_fill`` of the planned replica count, in which case the
+    joint annealer runs and the better of the two artifacts (by achieved
+    replicas; template wins ties — it is orders of magnitude cheaper to
+    rebuild) is returned.  Resource-aware replication is therefore never
+    degraded below what the joint path would have delivered, and on fills
+    the template path can reach (≥ 95 % of plan by default — in practice
+    all of the bench suite) the joint annealer never runs at all.
+
+With a cache the full build is keyed on a content hash of (kernel, spec,
+effective replication cap, knobs) — see :func:`repro.core.cache.make_cache_key`
+for why the free-resource snapshot is *normalized* to the replica cap it
+implies before hashing.  A :class:`~repro.core.cache.JITCache` constructed
+with ``persist_dir`` additionally writes every artifact through to a
+content-addressed on-disk store, so a restarted process warm-loads compiled
+kernels in milliseconds instead of recompiling (``benchmarks/
+persistent_cache_perf.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
@@ -51,6 +67,11 @@ from repro.core.program import OverlayProgram, compile_program
 from repro.core.replicate import ReplicationPlan, plan_replication, \
     throughput_gops
 from repro.core.route import RoutingResult, route
+
+# auto mode accepts the template path when it reaches this fraction of the
+# planned replica count (1.0 restores exact-parity-or-fallback semantics);
+# below it the joint annealer runs and the better artifact wins
+DEFAULT_MIN_TEMPLATE_FILL = 0.95
 
 
 @dataclasses.dataclass
@@ -72,7 +93,8 @@ class CompiledKernel:
     @property
     def par_time_ms(self) -> float:
         return (self.stage_times_ms["place"] + self.stage_times_ms["route"] +
-                self.stage_times_ms.get("stamp", 0.0))
+                self.stage_times_ms.get("stamp", 0.0) +
+                self.stage_times_ms.get("infill", 0.0))
 
     @property
     def compile_time_ms(self) -> float:
@@ -137,19 +159,6 @@ def lower_to_dfg(kernel: Union[str, Callable, DFG],
     return optimize(_lower_consts(trace(kernel, n_inputs, name)))
 
 
-def _frontend(kernel: Union[str, Callable, DFG], n_inputs: Optional[int],
-              name: Optional[str]) -> DFG:
-    if isinstance(kernel, str):
-        return compile_opencl_to_dfg(kernel)   # parses + optimizes
-    g = lower_to_dfg(kernel, n_inputs, name)
-    if g.optimized:
-        # already through the pass pipeline (cache keying lowers + optimizes
-        # before this stage runs) — re-optimizing would double the frontend
-        # cost of every cache miss
-        return g
-    return optimize(_lower_consts(g))
-
-
 def jit_compile(kernel: Union[str, Callable, DFG],
                 spec: OverlaySpec,
                 n_inputs: Optional[int] = None,
@@ -160,40 +169,44 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                 seed: int = 0,
                 place_effort: float = 1.0,
                 cache: Optional["JITCache"] = None,
-                pr_mode: str = "auto") -> CompiledKernel:
+                pr_mode: str = "auto",
+                min_template_fill: float = DEFAULT_MIN_TEMPLATE_FILL
+                ) -> CompiledKernel:
     """Full JIT pipeline. Raises PlacementError/RoutingError/LatencyError on
     genuine mapping failures (kernel too big for the exposed overlay).
 
     With ``cache``, the build is keyed on a content hash of (kernel, spec,
-    free-resource snapshot, replication knobs); a hit returns the previously
-    built CompiledKernel without running any compiler stage.  ``pr_mode``
-    selects the P&R strategy (see module docstring): ``"auto"`` (default),
-    ``"template"``, or ``"joint"``.
+    effective replica cap implied by the free-resource snapshot, replication
+    knobs); a hit returns the previously built CompiledKernel without
+    running any compiler stage.  ``pr_mode`` selects the P&R strategy (see
+    module docstring): ``"auto"`` (default), ``"template"``, or ``"joint"``;
+    ``min_template_fill`` is the fraction of the planned replica count the
+    template path must reach for ``auto`` to skip the joint annealer.
     """
     if pr_mode not in ("auto", "template", "joint"):
         raise ValueError(f"pr_mode must be auto|template|joint, "
                          f"got {pr_mode!r}")
-    key = None
-    if cache is not None:
-        # lower to a DFG once so every entry point (direct call, Context,
-        # Scheduler probe) keys the same kernel identically — a str keyed by
-        # source text here and by DFG fingerprint elsewhere would fragment
-        # the shared cache into redundant entries
-        kernel = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
-        key = make_cache_key(kernel, spec,
-                             free_fus=spec.n_fus - fu_headroom,
-                             free_io=spec.n_io - io_headroom,
-                             n_inputs=n_inputs, name=name,
-                             max_replicas=max_replicas, seed=seed,
-                             place_effort=place_effort, pr_mode=pr_mode)
-        hit = cache.get(key)
-        if hit is not None:
-            return hit
-
+    if not 0.0 < min_template_fill <= 1.0:
+        raise ValueError(f"min_template_fill must be in (0, 1], "
+                         f"got {min_template_fill!r}")
     times: Dict[str, float] = {}
 
+    # frontend runs before the cache lookup: keying needs the DFG normal
+    # form, and snapshot normalization needs the FU graph — both are
+    # microseconds next to any P&R stage, so the warm path stays ~free.
+    # OpenCL text goes through the cache's frontend tier (keyed on the raw
+    # source hash, computable without parsing), so a warm process skips
+    # even the parse+optimize pipeline
     t0 = time.perf_counter()
-    g = _frontend(kernel, n_inputs, name)
+    if cache is not None and isinstance(kernel, str):
+        from repro.core.cache import kernel_fingerprint
+        fkey = kernel_fingerprint(kernel)
+        g = cache.get_frontend(fkey)
+        if g is None:
+            g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+            cache.put_frontend(fkey, g)
+    else:
+        g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
     times["frontend"] = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()
@@ -210,24 +223,41 @@ def jit_compile(kernel: Union[str, Callable, DFG],
             f"{spec.n_fus - fu_headroom} FUs / {spec.n_io - io_headroom} IO")
     times["replicate"] = (time.perf_counter() - t0) * 1e3
 
-    placement = routing = lat = None
-    pr_path = "joint"
+    key = None
+    if cache is not None:
+        key = make_cache_key(g, spec,
+                             free_fus=spec.n_fus - fu_headroom,
+                             free_io=spec.n_io - io_headroom,
+                             n_inputs=n_inputs, name=name,
+                             max_replicas=max_replicas, seed=seed,
+                             place_effort=place_effort, pr_mode=pr_mode,
+                             min_template_fill=min_template_fill, fug=fug)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
 
-    # ---- template path: P&R one replica, stamp R copies -------------------
+    # ---- template path: P&R one replica, stamp R copies, gap-fill ---------
+    tpl_out = None
+    ttimes: Dict[str, float] = {}
     if pr_mode in ("auto", "template"):
-        out = _template_par(fug, g, spec, plan, seed, place_effort, cache,
-                            pr_mode, times)
-        if out is not None:
-            placement, routing, lat, plan = out
-            pr_path = "template"
+        tpl_out = _template_par(fug, g, spec, plan, seed, place_effort,
+                                cache, pr_mode, ttimes)
 
-    # ---- joint path: anneal all replicas, congestion back-off -------------
-    if placement is None:
+    use_template = False
+    if tpl_out is not None:
+        achieved = tpl_out[3].replicas
+        need = plan.replicas if pr_mode == "template" else \
+            math.ceil(min_template_fill * plan.replicas)
+        use_template = pr_mode == "template" or achieved >= need
+
+    if not use_template:
+        # ---- joint path: anneal all replicas, congestion back-off ---------
         from repro.core.latency import LatencyError
         from repro.core.route import RoutingError
 
         last_err: Optional[Exception] = None
         t_place = t_route = t_lat = 0.0
+        placement = routing = lat = None
         replicas = plan.replicas
         while replicas >= 1:
             try:
@@ -246,12 +276,31 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                 last_err = e
                 replicas -= max(1, replicas // 8)
         if placement is None or routing is None or lat is None:
-            raise last_err  # even a single copy does not map
-        if replicas != plan.replicas:
-            plan = plan.with_replicas(fug, replicas, "congestion")
-        times["place"] = t_place
-        times["route"] = t_route
-        times["latency"] = t_lat
+            if tpl_out is None:
+                raise last_err  # even a single copy does not map
+            replicas = 0       # template artifact is all we have
+        if tpl_out is not None and tpl_out[3].replicas >= replicas:
+            # the joint annealer backed off to (or below) what the template
+            # path already achieved: keep the template artifact — same or
+            # better fill, and orders of magnitude cheaper to rebuild
+            use_template = True
+            times["joint_probe"] = t_place + t_route + t_lat
+        else:
+            if replicas != plan.replicas:
+                plan = plan.with_replicas(fug, replicas, "congestion")
+            times["place"] = t_place
+            times["route"] = t_route
+            times["latency"] = t_lat
+            if ttimes:
+                # the spent template probe stays on the books so
+                # compile_time_ms reports real wall time
+                times["template_probe"] = sum(ttimes.values())
+
+    pr_path = "joint"
+    if use_template:
+        placement, routing, lat, plan = tpl_out
+        times.update(ttimes)
+        pr_path = "template"
 
     t0 = time.perf_counter()
     bs = generate(fug, spec, placement, routing, lat, plan.replicas)
@@ -269,18 +318,16 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
                   plan: ReplicationPlan, seed: int, place_effort: float,
                   cache: Optional["JITCache"], pr_mode: str,
                   times: Dict[str, float]):
-    """Try the template-stamping P&R path.
+    """Run the template-stamping P&R path: fetch/build the template, stamp
+    up to its slot capacity, then gap-fill toward the replication plan.
 
-    Returns (placement, routing, latency, plan) or None to fall back to the
-    joint annealer.  In ``auto`` mode the template is used only when stamping
-    reaches the planned replica count (so maximal resource-aware replication
-    is never silently reduced); forced ``template`` mode stamps as many
-    replicas as the slot capacity allows and marks the plan 'stamp'-limited.
+    Returns (placement, routing, latency, plan) — with ``plan`` re-targeted
+    at the achieved replica count when the template path fell short — or
+    None when no template region maps at all (``auto`` then falls back to
+    the joint annealer; forced ``template`` mode re-raises).  Stage times
+    land in ``times``: a template cache hit books zero place/route/latency
+    (the stages did not run), and gap-fill time is booked under "infill".
     """
-    if pr_mode == "auto" and \
-            template_mod.estimate_capacity(fug, spec) < plan.replicas:
-        return None
-
     tkey = make_template_key(g, spec, seed, place_effort) \
         if cache is not None else None
     tmpl = cache.get_template(tkey) if cache is not None else None
@@ -288,7 +335,8 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
     if tmpl is None:
         try:
             tmpl = template_mod.build_template(fug, spec, seed=seed,
-                                               effort=place_effort)
+                                               effort=place_effort,
+                                               target=plan.replicas)
         except template_mod.TemplateError:
             if pr_mode == "template":
                 raise
@@ -297,23 +345,25 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
         if cache is not None:
             cache.put_template(tkey, tmpl)
 
-    # plan.replicas >= 1 was enforced above and a built Template always has
-    # at least one verified slot, so replicas >= 1 here
+    # plan.replicas >= 1 was enforced by the caller and a built Template
+    # always has at least one verified slot, so replicas >= 1 here
     replicas = min(plan.replicas, tmpl.capacity)
-    if pr_mode == "auto" and replicas < plan.replicas:
-        if built:
-            # falling back to joint: keep the spent template build on the
-            # books so compile_time_ms reports real wall time
-            times["template_probe"] = sum(tmpl.build_ms.values())
-        return None
 
     # a template hit means the place/route/latency stages did not run at all
     times["place"] = tmpl.build_ms["place"] if built else 0.0
     times["route"] = tmpl.build_ms["route"] if built else 0.0
     times["latency"] = tmpl.build_ms["latency"] if built else 0.0
+    if built and tmpl.build_ms.get("scan", 0.0) > 0.0:
+        times["template_scan"] = tmpl.build_ms["scan"]
     t0 = time.perf_counter()
     placement, routing, lat = template_mod.stamp(tmpl, spec, replicas)
     times["stamp"] = (time.perf_counter() - t0) * 1e3
+    if replicas < plan.replicas:
+        t0 = time.perf_counter()
+        placement, routing, lat, replicas = template_mod.gap_fill(
+            fug, spec, placement, routing, lat, plan.replicas,
+            seed=seed, effort=place_effort)
+        times["infill"] = (time.perf_counter() - t0) * 1e3
     if replicas != plan.replicas:
         plan = plan.with_replicas(fug, replicas, "stamp")
     return placement, routing, lat, plan

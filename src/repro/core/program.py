@@ -51,6 +51,20 @@ class OverlayProgram:
     def n_instr(self) -> int:
         return int(self.instrs.shape[0])
 
+    def content_hash(self) -> str:
+        """Content hash over everything the executor consumes (instruction
+        words, immediates, register map) — the cross-process disk-cache
+        round-trip asserts equality on it."""
+        import hashlib
+        h = hashlib.sha256()
+        h.update(self.name.encode())
+        h.update(np.int64(self.n_regs).tobytes())
+        h.update(np.ascontiguousarray(self.instrs).tobytes())
+        h.update(np.ascontiguousarray(self.imms).tobytes())
+        h.update(np.asarray(self.in_slots + self.out_slots,
+                            np.int64).tobytes())
+        return h.hexdigest()
+
     def padded(self, n: int) -> "OverlayProgram":
         """Pad instruction list with NOPs to length n (fixed-shape executor)."""
         if n < self.n_instr:

@@ -40,15 +40,82 @@ class RoutedNet:
         return max(0, len(self.path) - 1)
 
 
-@dataclasses.dataclass
+_KIND = {"in": 0, "fu": 1, "out": 2}
+_KIND_R = {v: k for k, v in _KIND.items()}
+
+
+def _pack_nets(nets: List[RoutedNet]) -> Tuple["np.ndarray", "np.ndarray"]:
+    import numpy as np
+    meta = np.empty((len(nets), 9), np.int32)
+    coords = np.empty((sum(len(n.path) for n in nets), 2), np.int32)
+    off = 0
+    for i, n in enumerate(nets):
+        meta[i] = (n.net_id, _KIND[n.skind], n.src[0], n.src[1],
+                   _KIND[n.dkind], n.dst[0], n.dst[1], n.port, len(n.path))
+        coords[off:off + len(n.path)] = n.path
+        off += len(n.path)
+    return meta, coords
+
+
+def _unpack_nets(meta, coords) -> List[RoutedNet]:
+    nets: List[RoutedNet] = []
+    off = 0
+    cl = coords.tolist()
+    for nid, sk, sr, si, dk, dr, di, port, plen in meta.tolist():
+        nets.append(RoutedNet(nid, _KIND_R[sk], (sr, si), _KIND_R[dk],
+                              (dr, di), port,
+                              [tuple(c) for c in cl[off:off + plen]]))
+        off += plen
+    return nets
+
+
 class RoutingResult:
-    nets: List[RoutedNet]
-    iterations: int
-    max_channel_load: int
-    total_wirelength: int       # tree segments, counted once per net
+    """The routed netlist plus router statistics.
+
+    Pickles in a *packed* form — two numpy arrays instead of tens of
+    thousands of per-net python objects — and rebuilds :attr:`nets` lazily
+    on first access.  A disk-cache warm load therefore never materializes
+    the net objects at all (the serving path only executes the already-
+    generated bitstream/program), which keeps restart warm-loads in the
+    ~millisecond range and avoids large GC allocation bursts.
+    """
+
+    def __init__(self, nets: List[RoutedNet], iterations: int,
+                 max_channel_load: int, total_wirelength: int):
+        self._nets: Optional[List[RoutedNet]] = nets
+        self._packed = None
+        self.iterations = iterations
+        self.max_channel_load = max_channel_load
+        self.total_wirelength = total_wirelength   # tree segments, once/net
+
+    @property
+    def nets(self) -> List[RoutedNet]:
+        if self._nets is None:
+            self._nets = _unpack_nets(*self._packed)
+            self._packed = None
+        return self._nets
 
     def wires_used(self) -> int:
         return self.total_wirelength
+
+    def __getstate__(self):
+        meta, coords = self._packed if self._packed is not None \
+            else _pack_nets(self._nets)
+        return dict(meta=meta, coords=coords, iterations=self.iterations,
+                    max_channel_load=self.max_channel_load,
+                    total_wirelength=self.total_wirelength)
+
+    def __setstate__(self, state):
+        self._nets = None
+        self._packed = (state["meta"], state["coords"])
+        self.iterations = state["iterations"]
+        self.max_channel_load = state["max_channel_load"]
+        self.total_wirelength = state["total_wirelength"]
+
+    def __repr__(self) -> str:
+        n = len(self._nets) if self._nets is not None else len(self._packed[0])
+        return (f"RoutingResult({n} nets, {self.iterations} iters, "
+                f"wirelength {self.total_wirelength})")
 
 
 def _pos(placement: Placement, kind: str, key: Tuple[int, int]) -> Coord:
@@ -61,10 +128,15 @@ def _pos(placement: Placement, kind: str, key: Tuple[int, int]) -> Coord:
 
 def route(fug: FUGraph, spec: OverlaySpec, placement: Placement,
           replicas: int = 1, max_iters: int = 60,
-          rg: Optional[RoutingGraph] = None) -> RoutingResult:
+          rg: Optional[RoutingGraph] = None,
+          base_usage: Optional[Dict[Tuple[Coord, Coord], int]] = None
+          ) -> RoutingResult:
     """Route the placed netlist.  ``rg`` restricts routing to a sub-graph of
     the fabric (the template pipeline passes a strip-local graph so routes
-    provably never leave the stamped region)."""
+    provably never leave the stamped region).  ``base_usage`` pre-charges
+    channel load that PathFinder must route around but may never rip up —
+    the template gap-fill pass uses it to add remnant replicas to an
+    already-routed fabric without disturbing the existing nets."""
     if rg is None:
         rg = RoutingGraph(spec)
 
@@ -76,7 +148,8 @@ def route(fug: FUGraph, spec: OverlaySpec, placement: Placement,
             sinks_of.setdefault(key, []).append((dkind, (r, did), port))
     net_keys = sorted(sinks_of.keys(), key=lambda k: (k[0], k[1]))
 
-    usage: Dict[Tuple[Coord, Coord], int] = {}
+    usage: Dict[Tuple[Coord, Coord], int] = \
+        dict(base_usage) if base_usage else {}
     history: Dict[Tuple[Coord, Coord], float] = {}
     # per net: set of tree edges, and per-sink coord paths
     tree_edges: Dict[int, List[Tuple[Coord, Coord]]] = {}

@@ -15,7 +15,10 @@ overlay, which is what "resource-aware" means operationally.  Reservations
 On top sit the serving-layer pieces:
 
   * :class:`repro.core.cache.JITCache` — content-addressed compile cache a
-    Context (or a whole Scheduler) threads through ``jit_compile``;
+    Context (or a whole Scheduler) threads through ``jit_compile``; built
+    with ``persist_dir`` it write-throughs to an on-disk tier, so a
+    restarted server (or a sibling worker on the host) warm-loads compiled
+    artifacts in milliseconds instead of recompiling;
   * :class:`repro.core.queue.CommandQueue` — in/out-of-order kernel queues
     with Event timestamps (see that module);
   * :class:`Scheduler` — multi-device placement: an incoming kernel lands on
@@ -279,10 +282,16 @@ class Scheduler:
     """
 
     def __init__(self, devices: Sequence[Device],
-                 cache: Optional[JITCache] = None):
+                 cache: Optional[JITCache] = None,
+                 persist_dir: Optional[str] = None):
         if not devices:
             raise ValueError("scheduler needs at least one device")
-        self.cache = cache if cache is not None else JITCache()
+        if cache is not None and persist_dir is not None:
+            raise ValueError(
+                "pass persist_dir OR an explicit cache (construct the cache "
+                "with JITCache(persist_dir=...) to combine them)")
+        self.cache = cache if cache is not None else \
+            JITCache(persist_dir=persist_dir)
         self.contexts: Dict[str, Context] = {
             d.name: Context(d, cache=self.cache) for d in devices}
         # guards against recursive rebalancing: shedding and re-inflation

@@ -45,6 +45,38 @@ def test_key_includes_free_resource_snapshot():
     assert make_cache_key(POLY1, SPEC, free_fus=64, free_io=64) == k0
 
 
+def test_key_normalizes_snapshot_to_replica_cap():
+    """Distinct snapshots that imply the same replication plan must share
+    one entry: the compiler only consumes the snapshot through the plan.
+    chebyshev needs 3 FUs/replica, so one busy FU doesn't change the cap
+    (64 // 3 == 63 // 3 == 21) — but crossing a replica boundary does."""
+    k0 = make_cache_key(CHEB, SPEC, free_fus=64, free_io=64)
+    k1 = make_cache_key(CHEB, SPEC, free_fus=63, free_io=64)
+    assert k0 == k1
+    k2 = make_cache_key(CHEB, SPEC, free_fus=62, free_io=64)   # cap 20
+    assert k2 != k0
+    # pr_mode / fill knobs are part of the key
+    assert make_cache_key(CHEB, SPEC, free_fus=64, free_io=64,
+                          pr_mode="joint") != k0
+
+
+def test_busy_fleet_occupancy_jitter_still_hits():
+    """Satellite (ISSUE 3): on a busy device whose occupancy moves by less
+    than one replica footprint between requests, the second build is a HIT —
+    with raw-snapshot keys it was a guaranteed miss."""
+    cache = JITCache()
+    ctx = Context(Device("d", SPEC), cache=cache)
+    ctx.reserve(fus=1)                      # sub-replica occupancy jitter
+    p1 = ctx.build_program(CHEB, max_replicas=4)
+    p1.release()
+    ctx.release(fus=1)
+    ctx.reserve(fus=2)                      # different snapshot, same cap
+    p2 = ctx.build_program(CHEB, max_replicas=4)
+    assert p2.compiled is p1.compiled
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    assert cache.stats.hit_rate == 0.5
+
+
 # -------------------------------------------------------------------- cache
 
 def test_cache_hit_returns_identical_compiled_kernel():
