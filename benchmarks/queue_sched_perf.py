@@ -1,0 +1,178 @@
+"""Queue-aware scheduling benchmark (ISSUE 4 acceptance benchmark).
+
+Replays one deterministic mixed-tenant trace twice on an identical
+two-overlay fleet — once with the Session's queue-aware **makespan**
+placement policy, once with the historical **free_fabric** best-fit — and
+compares the fleet's modelled makespan (max engine-timeline end across the
+devices).
+
+The trace is adversarial for free-fabric placement in the way real serving
+is: one device carries static "other logic" (paper Fig. 5 reservations), so
+it always exposes *less* free fabric, and one early tenant builds a deep
+execution backlog on the emptier device.  Best-fit keeps routing every new
+tenant to the emptier-but-backlogged device; the makespan ranking sees the
+engine timeline + pending reconfig charge and routes new tenants around
+the queue.  Everything measured is modelled µs (no wall clock), so the
+comparison — and the CI gate that makespan-aware placement is never worse —
+is exactly reproducible.
+
+Acceptance (ISSUE 4): recorded in the committed ``BENCH_compile.json``
+under the ``queue_sched`` key; CI gates speedup >= 1.0.
+
+    PYTHONPATH=src python benchmarks/queue_sched_perf.py \
+        [--gate 1.0] [--json out.json] [--update BENCH_compile.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.cache import JITCache
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.core.runtime import Device
+from repro.core.session import Session
+
+SPEC_KW = dict(width=8, height=8, dsp_per_fu=2)
+# static "other logic" on ovl1: free-fabric best-fit will always rank ovl0
+# (64 free FUs vs 40) first for the small builds below
+RESERVE_FUS = 24
+
+# (op, tenant, kernel, arg): "build" arg = max_replicas; "run" arg = items.
+# tenant-a builds first and hammers ovl0 with a deep backlog; b/c/d then
+# arrive mid-storm — a queue-aware scheduler routes them around it
+TRACE = [
+    ("build", "tenant-a", "poly1", 2),
+    *[("run", "tenant-a", "poly1", 200_000)] * 8,
+    ("build", "tenant-b", "chebyshev", 2),
+    *[("run", "tenant-b", "chebyshev", 150_000)] * 6,
+    *[("run", "tenant-a", "poly1", 200_000)] * 4,
+    ("build", "tenant-c", "mibench", 2),
+    *[("run", "tenant-c", "mibench", 150_000)] * 6,
+    ("build", "tenant-d", "qspline", 1),
+    *[("run", "tenant-d", "qspline", 100_000)] * 4,
+    *[("run", "tenant-b", "chebyshev", 150_000)] * 3,
+]
+
+
+def run_trace(policy: str) -> Dict:
+    """Replay TRACE under ``policy``; returns modelled fleet metrics."""
+    spec = OverlaySpec(**SPEC_KW)
+    sess = Session([Device("ovl0", spec), Device("ovl1", spec)],
+                   cache=JITCache(capacity=64), policy=policy)
+    sess.contexts["ovl1"].reserve(fus=RESERVE_FUS)
+    rng = np.random.default_rng(0)
+    progs: Dict = {}
+    n_run = 0
+    for op, tenant, kname, arg in TRACE:
+        if op == "build":
+            progs[(tenant, kname)] = sess.build(
+                BENCHMARKS[kname][0], CompileOptions(max_replicas=arg),
+                tenant=tenant)
+        else:
+            prog = progs[(tenant, kname)]
+            bufs = [rng.uniform(-1, 1, arg).astype(np.float32)
+                    for _ in prog.compiled.dfg.inputs]
+            sess.enqueue(prog, *bufs, tenant=tenant)
+            n_run += 1
+    makespan = max(c.engine_end_us for c in sess.contexts.values())
+    per_dev = {n: round(c.engine_end_us, 1)
+               for n, c in sess.contexts.items()}
+    placements = {f"{t}/{k}": p.ctx.device.name
+                  for (t, k), p in progs.items()}
+    sess.close()
+    return dict(policy=policy, makespan_us=round(makespan, 1),
+                device_end_us=per_dev, placements=placements,
+                kernels_run=n_run,
+                kernels_per_sec=round(n_run / (makespan * 1e-6), 1))
+
+
+def bench() -> Dict:
+    ms = run_trace("makespan")
+    ff = run_trace("free_fabric")
+    return dict(
+        spec=SPEC_KW, reserve_fus=RESERVE_FUS, trace_ops=len(TRACE),
+        makespan=ms, free_fabric=ff,
+        speedup=round(ff["makespan_us"] / max(ms["makespan_us"], 1e-9), 3))
+
+
+def check_gate(result: Dict, gate: float) -> List[str]:
+    """Makespan-aware placement must never be worse than free-fabric."""
+    failures = []
+    if result["speedup"] < gate:
+        failures.append(
+            f"makespan-aware placement only {result['speedup']}x vs "
+            f"free-fabric (gate {gate}x): "
+            f"{result['makespan']['makespan_us']} vs "
+            f"{result['free_fabric']['makespan_us']} us")
+    return failures
+
+
+def run() -> List[Dict]:
+    """run.py suite entry point."""
+    result = bench()
+    out = []
+    for key in ("makespan", "free_fabric"):
+        r = result[key]
+        out.append(dict(
+            name=f"queue_sched/{key}",
+            us_per_call=r["makespan_us"],
+            derived=(f"fleet makespan {r['makespan_us']:.0f}us "
+                     f"{r['kernels_per_sec']:.0f} kernels/s "
+                     f"dev_end={r['device_end_us']}")))
+    out.append(dict(
+        name="queue_sched/speedup",
+        us_per_call=0.0,
+        derived=f"makespan-aware {result['speedup']}x vs free-fabric"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", type=float, default=None,
+                    help="fail unless makespan-aware >= GATE x free-fabric "
+                         "(1.0 = never worse)")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--update", metavar="PATH", default=None,
+                    help="merge the result into an existing benchmark JSON "
+                         "under the 'queue_sched' key")
+    args = ap.parse_args()
+    result = bench()
+
+    for key in ("makespan", "free_fabric"):
+        r = result[key]
+        print(f"{key:<12} fleet makespan {r['makespan_us']:>10.1f} us  "
+              f"({r['kernels_per_sec']:.0f} kernels/s)")
+        for name, end in r["device_end_us"].items():
+            print(f"  {name}: engine end {end:>10.1f} us")
+        for prog, dev in r["placements"].items():
+            print(f"  {prog:<22} -> {dev}")
+    print(f"speedup: makespan-aware {result['speedup']}x vs free-fabric")
+
+    failures = check_gate(result, args.gate) if args.gate else []
+    result["gate"] = args.gate
+    result["gate_failures"] = failures
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    if args.update:
+        with open(args.update) as f:
+            doc = json.load(f)
+        doc["queue_sched"] = result
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"updated {args.update} [queue_sched]")
+    if failures:
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

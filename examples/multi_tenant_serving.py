@@ -1,11 +1,15 @@
 """Multi-tenant serving on a two-overlay fleet — the ROADMAP's "high-traffic
-runtime" in miniature.
+runtime" in miniature, on the async Session API.
 
-Several tenants submit kernels from the paper's benchmark suite.  The
-Scheduler places each build on the device with the most free fabric (shedding
-replicas from resident programs when the fleet is full), a fleet-wide JIT
-cache makes repeat compilations free, and per-tenant out-of-order command
-queues batch kernels against the overlays with modelled config/exec time.
+Several tenants submit kernels from the paper's benchmark suite through ONE
+:class:`~repro.core.session.Session`.  Compilation is asynchronous: every
+``compile`` returns a KernelFuture immediately and the JIT pipeline runs on
+the worker pool, with identical concurrent requests single-flighted into
+one build.  ``enqueue`` chains each execution onto its compile event, so
+the modelled per-request latency includes JIT-compile time exactly as the
+paper's Fig. 5 flow implies — and the queue-aware scheduler places each
+build on the device with the smallest projected makespan, not merely the
+most free fabric.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -16,8 +20,10 @@ import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.cache import JITCache
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
-from repro.core.runtime import Buffer, Device, Scheduler
+from repro.core.runtime import Device
+from repro.core.session import Session
 
 SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
 
@@ -27,61 +33,74 @@ TENANTS = {
     "tenant-b": ["sgfilter", "sgfilter", "poly2"],
     "tenant-c": ["chebyshev", "mibench", "chebyshev", "qspline"],
 }
+OPTS = CompileOptions(max_replicas=6)
 
 
 def main() -> None:
-    cache = JITCache(capacity=32)
-    sched = Scheduler([Device("ovl0", SPEC), Device("ovl1", SPEC)],
-                      cache=cache)
     rng = np.random.default_rng(0)
+    with Session([Device("ovl0", SPEC), Device("ovl1", SPEC)],
+                 cache=JITCache(capacity=32), max_workers=4) as sess:
+        sess.set_priority("tenant-a", 1)     # tenant-a is shed last
 
-    queues = {name: ctx.create_queue(in_order=False)
-              for name, ctx in sched.contexts.items()}
-    programs = {}
-    events = []
+        # phase 1: every tenant fires all its compiles up front — futures
+        # come back immediately; identical kernels across tenants
+        # single-flight into one pipeline run when their submissions
+        # overlap a build still in flight
+        futures = {}
+        for tenant, stream in TENANTS.items():
+            for kname in set(stream):
+                futures[(tenant, kname)] = sess.compile(
+                    BENCHMARKS[kname][0], OPTS, tenant=tenant)
+        print(f"submitted {len(futures)} compiles "
+              f"({sess.cache.stats.singleflight_hits} single-flighted)")
 
-    for tenant, stream in TENANTS.items():
-        for kname in stream:
-            if kname not in programs:
-                prog = sched.build(BENCHMARKS[kname][0], max_replicas=6)
-                programs[kname] = prog
-                print(f"[{tenant}] built {kname} on "
-                      f"{prog.ctx.device.name} in {prog.build_ms:7.2f} ms "
-                      f"({prog.compiled.plan.replicas} replicas)")
-            prog = programs[kname]
-            n_in = len(prog.compiled.dfg.inputs)
-            bufs = [Buffer(rng.uniform(-1, 1, 2048).astype(np.float32))
-                    for _ in range(n_in)]
-            ev = queues[prog.ctx.device.name].enqueue_kernel(
-                prog.create_kernel().set_args(*bufs))
-            events.append((tenant, kname, ev))
+        # phase 2: enqueue the request streams; each execution chains onto
+        # its compile event, so timestamps include JIT latency
+        events = []
+        for tenant, stream in TENANTS.items():
+            for kname in stream:
+                fut = futures[(tenant, kname)]
+                n_in = len(fut.result().compiled.dfg.inputs)
+                bufs = [rng.uniform(-1, 1, 2048).astype(np.float32)
+                        for _ in range(n_in)]
+                events.append((tenant, kname,
+                               sess.enqueue(fut, *bufs, tenant=tenant)))
 
-    print("\nper-request modelled latency:")
-    for tenant, kname, ev in events:
-        print(f"  {tenant} {kname:<10} queue {ev.queue_delay_us:7.1f} us | "
-              f"config {ev.config_us:5.1f} us | exec {ev.exec_us:6.2f} us")
+        for (tenant, kname), fut in sorted(futures.items()):
+            prog = fut.result()
+            print(f"[{tenant}] {kname:<10} on {prog.ctx.device.name} "
+                  f"compile {fut.compile_us / 1e3:7.2f} ms "
+                  f"({prog.compiled.plan.replicas} replicas)")
 
-    print("\nfleet ledger:")
-    for dev, row in sched.ledger().items():
-        print(f"  {dev}: {row}")
-    assert sched.ledger_consistent(), "resource ledger out of balance"
+        print("\nper-request modelled latency (incl. JIT wait):")
+        for tenant, kname, ev in events:
+            print(f"  {tenant} {kname:<10} queue {ev.queue_delay_us:8.1f} us"
+                  f" | config {ev.config_us:5.1f} us"
+                  f" | exec {ev.exec_us:6.2f} us")
 
-    total = len(events)
-    makespan = max(q.makespan_us for q in queues.values())
-    print(f"\nserved {total} kernels, fleet makespan {makespan:.0f} us "
-          f"-> {total / (makespan * 1e-6):.0f} kernels/s modelled")
+        print("\nfleet ledger + makespan:")
+        for dev, row in sess.ledger().items():
+            print(f"  {dev}: {row}")
+        for dev, row in sess.makespan_report().items():
+            print(f"  {dev}: engine end {row['engine_end_us']:.0f} us")
+        assert sess.ledger_consistent(), "resource ledger out of balance"
 
-    # tenant churn: everyone disconnects, then poly1 is requested again at
-    # the same (now empty) fleet state — the fleet-wide cache returns the
-    # compiled artifact without running a single compiler stage
-    for prog in programs.values():
-        prog.release()
-    t0 = time.perf_counter()
-    sched.build(BENCHMARKS["poly1"][0], max_replicas=6)
-    print(f"after churn: poly1 re-served in "
-          f"{(time.perf_counter() - t0) * 1e3:.3f} ms (cache hit)")
-    print(f"JIT cache: {cache.stats.as_dict()}")
-    assert cache.stats.hits >= 1
+        total = len(events)
+        makespan = sess.finish()
+        print(f"\nserved {total} kernels, fleet makespan {makespan:.0f} us "
+              f"-> {total / (makespan * 1e-6):.0f} kernels/s modelled")
+
+        # tenant churn: everyone disconnects, then poly1 is requested again
+        # at the same (now empty) fleet state — the fleet-wide cache
+        # returns the compiled artifact without one compiler stage running
+        for fut in futures.values():
+            fut.result().release()
+        t0 = time.perf_counter()
+        sess.build(BENCHMARKS["poly1"][0], OPTS, tenant="tenant-a")
+        print(f"after churn: poly1 re-served in "
+              f"{(time.perf_counter() - t0) * 1e3:.3f} ms (cache hit)")
+        print(f"JIT cache: {sess.cache.stats.as_dict()}")
+        assert sess.cache.stats.hits >= 1
 
 
 if __name__ == "__main__":

@@ -45,11 +45,13 @@ import hashlib
 import os
 import pickle
 import struct
+import threading
 from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Callable, Iterable, Optional, Tuple, Union
 
 from repro.core.dfg import DFG
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 
 CacheKey = str
@@ -109,9 +111,16 @@ def make_cache_key(kernel: Union[str, Callable, DFG],
                    place_effort: float = 1.0,
                    pr_mode: str = "auto",
                    min_template_fill: Optional[float] = None,
-                   fug=None) -> CacheKey:
+                   fug=None,
+                   opts: Optional[CompileOptions] = None) -> CacheKey:
     """The full key: kernel content × overlay × *normalized* free-resource
-    snapshot × replication knobs × P&R mode.
+    snapshot × :class:`~repro.core.options.CompileOptions`.
+
+    The knob tail of the key IS ``opts.key_tail()`` — the frozen options
+    object replaced the ad-hoc tuple this function used to assemble, so a
+    knob added to CompileOptions is automatically part of the key.  The
+    loose keyword arguments survive as a shim: when ``opts`` is None they
+    are folded into one (legacy callers and tests keep working).
 
     The snapshot is normalized to the replication plan it implies (the
     effective replica cap plus its limiting resource): ``jit_compile``
@@ -126,20 +135,24 @@ def make_cache_key(kernel: Union[str, Callable, DFG],
     otherwise the kernel is lowered and fused here.
     """
     from repro.core.replicate import plan_replication
-    kf = kernel_fingerprint(kernel, n_inputs=n_inputs, name=name)
+    if opts is None:
+        kw = {} if min_template_fill is None else \
+            dict(min_template_fill=min_template_fill)
+        opts = CompileOptions(n_inputs=n_inputs, name=name,
+                              max_replicas=max_replicas, seed=seed,
+                              place_effort=place_effort, pr_mode=pr_mode,
+                              **kw)
+    kf = kernel_fingerprint(kernel, n_inputs=opts.n_inputs, name=opts.name)
     if fug is None:
         from repro.core.fuse import to_fu_graph
         from repro.core.jit import lower_to_dfg
-        g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+        g = lower_to_dfg(kernel, opts.n_inputs, opts.name, parse_source=True)
         fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
-    plan = plan_replication(fug, spec, max_replicas=max_replicas,
+    plan = plan_replication(fug, spec, max_replicas=opts.max_replicas,
                             fu_headroom=spec.n_fus - free_fus,
                             io_headroom=spec.n_io - free_io)
-    if min_template_fill is None:
-        from repro.core.jit import DEFAULT_MIN_TEMPLATE_FILL
-        min_template_fill = DEFAULT_MIN_TEMPLATE_FILL
     ctx = (f"{spec_fingerprint(spec)}:r{plan.replicas}:{plan.limited_by}:"
-           f"{seed}:{place_effort:g}:{pr_mode}:{min_template_fill:g}")
+           f"{opts.key_tail()}")
     return f"{kf}@{hashlib.sha256(ctx.encode()).hexdigest()[:16]}"
 
 
@@ -293,6 +306,10 @@ class CacheStats:
     # mark that the artifact was warm-loaded from disk, not memory
     disk_hits: int = 0
     disk_template_hits: int = 0
+    # Session single-flight: a compile request that joined an identical
+    # in-flight build instead of starting its own pipeline run.  These never
+    # reach get()/put(), so without the counter the dedup win is invisible
+    singleflight_hits: int = 0
 
     @property
     def lookups(self) -> int:
@@ -313,6 +330,7 @@ class CacheStats:
                     frontend_misses=self.frontend_misses,
                     disk_hits=self.disk_hits,
                     disk_template_hits=self.disk_template_hits,
+                    singleflight_hits=self.singleflight_hits,
                     hit_rate=round(self.hit_rate, 4))
 
 
@@ -322,6 +340,13 @@ class JITCache:
     Shared safely between any number of Contexts/Schedulers: entries are
     immutable compile artifacts, and resource accounting happens in the
     runtime ledger, never in the cache.
+
+    **Thread-safe**: the Session API runs builds on a worker pool, so every
+    tier lookup/insert (and its LRU reordering + stats mutation) happens
+    under one reentrant lock — an OrderedDict mid-``move_to_end`` is not
+    safe to mutate from a second thread.  The lock is held only around
+    in-memory bookkeeping and (on misses/writes) the disk tier; it is never
+    held while a compile runs, so builds still overlap.
 
     With ``persist_dir`` every insertion is written through to a
     :class:`DiskCache` and every in-memory miss falls back to a disk
@@ -345,41 +370,55 @@ class JITCache:
         self.disk: Optional[DiskCache] = \
             DiskCache(persist_dir) if persist_dir is not None else None
         self.stats = CacheStats()
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------- protocol
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: CacheKey) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def keys(self) -> Iterable[CacheKey]:
         """Keys in LRU order (least recently used first)."""
-        return tuple(self._entries.keys())
+        with self._lock:
+            return tuple(self._entries.keys())
 
     # -------------------------------------------------------------- lookups
     def get(self, key: CacheKey):
         """Return the cached CompiledKernel or None; counts hit/miss and
         refreshes recency on hit.  Falls back to (and promotes from) the
         disk tier when one is configured."""
-        entry = self._entries.get(key)
-        if entry is None and self.disk is not None:
-            entry = self.disk.get(key)
-            if entry is not None:
-                self.stats.disk_hits += 1
-                self._insert(self._entries, key, entry, self.capacity)
-        if entry is None:
-            self.stats.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.stats.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None and self.disk is not None:
+                entry = self.disk.get(key)
+                if entry is not None:
+                    self.stats.disk_hits += 1
+                    self._insert(self._entries, key, entry, self.capacity)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
 
     def put(self, key: CacheKey, ck) -> None:
-        self._insert(self._entries, key, ck, self.capacity)
-        self.stats.insertions += 1
-        if self.disk is not None:
-            self.disk.put(key, ck)
+        with self._lock:
+            self._insert(self._entries, key, ck, self.capacity)
+            self.stats.insertions += 1
+            if self.disk is not None:
+                self.disk.put(key, ck)
+
+    def note_build_failure(self) -> None:
+        """Count a miss whose compile then failed to place/route (e.g. a
+        scheduler placement probe on a full device) — callers may be on
+        worker threads, so the increment takes the cache lock like every
+        other stats mutation."""
+        with self._lock:
+            self.stats.build_failures += 1
 
     def _insert(self, table, key: CacheKey, obj, capacity: int) -> None:
         table[key] = obj
@@ -395,24 +434,26 @@ class JITCache:
     def get_template(self, key: CacheKey):
         """Stage-level lookup of a P&R :class:`~repro.core.template.Template`;
         counts template_hits/template_misses and refreshes recency."""
-        entry = self._templates.get(key)
-        if entry is None and self.disk is not None:
-            entry = self.disk.get(key)
-            if entry is not None:
-                self.stats.disk_template_hits += 1
-                self._insert(self._templates, key, entry,
-                             self.template_capacity)
-        if entry is None:
-            self.stats.template_misses += 1
-            return None
-        self._templates.move_to_end(key)
-        self.stats.template_hits += 1
-        return entry
+        with self._lock:
+            entry = self._templates.get(key)
+            if entry is None and self.disk is not None:
+                entry = self.disk.get(key)
+                if entry is not None:
+                    self.stats.disk_template_hits += 1
+                    self._insert(self._templates, key, entry,
+                                 self.template_capacity)
+            if entry is None:
+                self.stats.template_misses += 1
+                return None
+            self._templates.move_to_end(key)
+            self.stats.template_hits += 1
+            return entry
 
     def put_template(self, key: CacheKey, tmpl) -> None:
-        self._insert(self._templates, key, tmpl, self.template_capacity)
-        if self.disk is not None:
-            self.disk.put(key, tmpl)
+        with self._lock:
+            self._insert(self._templates, key, tmpl, self.template_capacity)
+            if self.disk is not None:
+                self.disk.put(key, tmpl)
 
     # ------------------------------------------------------------- frontend
     def get_frontend(self, key: CacheKey):
@@ -421,29 +462,33 @@ class JITCache:
         parsing).  A hit skips the OpenCL parse + optimize pipeline, which
         is most of what a disk-warm build would otherwise still pay; the
         DFG is shared read-only across builds (the fuse stage copies)."""
-        g = self._frontends.get(key)
-        if g is None and self.disk is not None:
-            g = self.disk.get(key)
-            if g is not None:
-                self._insert(self._frontends, key, g, self._frontend_capacity)
-        if g is None:
-            self.stats.frontend_misses += 1
-            return None
-        self._frontends.move_to_end(key)
-        self.stats.frontend_hits += 1
-        return g
+        with self._lock:
+            g = self._frontends.get(key)
+            if g is None and self.disk is not None:
+                g = self.disk.get(key)
+                if g is not None:
+                    self._insert(self._frontends, key, g,
+                                 self._frontend_capacity)
+            if g is None:
+                self.stats.frontend_misses += 1
+                return None
+            self._frontends.move_to_end(key)
+            self.stats.frontend_hits += 1
+            return g
 
     def put_frontend(self, key: CacheKey, g) -> None:
-        self._insert(self._frontends, key, g, self._frontend_capacity)
-        if self.disk is not None:
-            self.disk.put(key, g)
+        with self._lock:
+            self._insert(self._frontends, key, g, self._frontend_capacity)
+            if self.disk is not None:
+                self.disk.put(key, g)
 
     def clear(self) -> None:
         """Drop the in-memory tiers (the disk tier, if any, is retained —
         it is the restart-survival layer)."""
-        self._entries.clear()
-        self._templates.clear()
-        self._frontends.clear()
+        with self._lock:
+            self._entries.clear()
+            self._templates.clear()
+            self._frontends.clear()
 
     def __repr__(self) -> str:
         return (f"JITCache({len(self)}/{self.capacity} entries, "

@@ -61,6 +61,7 @@ from repro.core.dfg import DFG, optimize, trace
 from repro.core.fuse import FUGraph, to_fu_graph
 from repro.core.ir import compile_opencl_to_dfg, _lower_consts
 from repro.core.latency import LatencyAssignment, balance
+from repro.core.options import CompileOptions, DEFAULT_MIN_TEMPLATE_FILL
 from repro.core.overlay import OverlaySpec
 from repro.core.place import Placement, place
 from repro.core.program import OverlayProgram, compile_program
@@ -68,10 +69,8 @@ from repro.core.replicate import ReplicationPlan, plan_replication, \
     throughput_gops
 from repro.core.route import RoutingResult, route
 
-# auto mode accepts the template path when it reaches this fraction of the
-# planned replica count (1.0 restores exact-parity-or-fallback semantics);
-# below it the joint annealer runs and the better artifact wins
-DEFAULT_MIN_TEMPLATE_FILL = 0.95
+__all__ = ["CompiledKernel", "CompileOptions", "DEFAULT_MIN_TEMPLATE_FILL",
+           "jit_compile", "lower_to_dfg", "overlay_jit"]
 
 
 @dataclasses.dataclass
@@ -170,25 +169,33 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                 place_effort: float = 1.0,
                 cache: Optional["JITCache"] = None,
                 pr_mode: str = "auto",
-                min_template_fill: float = DEFAULT_MIN_TEMPLATE_FILL
-                ) -> CompiledKernel:
+                min_template_fill: float = DEFAULT_MIN_TEMPLATE_FILL,
+                opts: Optional[CompileOptions] = None) -> CompiledKernel:
     """Full JIT pipeline. Raises PlacementError/RoutingError/LatencyError on
     genuine mapping failures (kernel too big for the exposed overlay).
 
+    The canonical way to tune the build is one frozen
+    :class:`~repro.core.options.CompileOptions` value (``opts``) — the same
+    object the Session API and the cache key consume.  The loose keyword
+    knobs are the legacy shim: when ``opts`` is None they are folded into
+    one (and validated there); when ``opts`` is given they are ignored.
+
     With ``cache``, the build is keyed on a content hash of (kernel, spec,
-    effective replica cap implied by the free-resource snapshot, replication
-    knobs); a hit returns the previously built CompiledKernel without
-    running any compiler stage.  ``pr_mode`` selects the P&R strategy (see
-    module docstring): ``"auto"`` (default), ``"template"``, or ``"joint"``;
-    ``min_template_fill`` is the fraction of the planned replica count the
-    template path must reach for ``auto`` to skip the joint annealer.
+    effective replica cap implied by the free-resource snapshot,
+    ``opts.key_tail()``); a hit returns the previously built CompiledKernel
+    without running any compiler stage.  ``opts.pr_mode`` selects the P&R
+    strategy (see module docstring): ``"auto"`` (default), ``"template"``,
+    or ``"joint"``; ``opts.min_template_fill`` is the fraction of the
+    planned replica count the template path must reach for ``auto`` to skip
+    the joint annealer.
     """
-    if pr_mode not in ("auto", "template", "joint"):
-        raise ValueError(f"pr_mode must be auto|template|joint, "
-                         f"got {pr_mode!r}")
-    if not 0.0 < min_template_fill <= 1.0:
-        raise ValueError(f"min_template_fill must be in (0, 1], "
-                         f"got {min_template_fill!r}")
+    if opts is None:
+        # CompileOptions.__post_init__ validates pr_mode / fill range
+        opts = CompileOptions(n_inputs=n_inputs, name=name,
+                              max_replicas=max_replicas, seed=seed,
+                              place_effort=place_effort, pr_mode=pr_mode,
+                              min_template_fill=min_template_fill)
+    n_inputs, name = opts.n_inputs, opts.name
     times: Dict[str, float] = {}
 
     # frontend runs before the cache lookup: keying needs the DFG normal
@@ -214,7 +221,7 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     times["fuse"] = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()
-    plan = plan_replication(fug, spec, max_replicas=max_replicas,
+    plan = plan_replication(fug, spec, max_replicas=opts.max_replicas,
                             fu_headroom=fu_headroom, io_headroom=io_headroom)
     if plan.replicas == 0:
         from repro.core.place import PlacementError
@@ -228,10 +235,7 @@ def jit_compile(kernel: Union[str, Callable, DFG],
         key = make_cache_key(g, spec,
                              free_fus=spec.n_fus - fu_headroom,
                              free_io=spec.n_io - io_headroom,
-                             n_inputs=n_inputs, name=name,
-                             max_replicas=max_replicas, seed=seed,
-                             place_effort=place_effort, pr_mode=pr_mode,
-                             min_template_fill=min_template_fill, fug=fug)
+                             opts=opts, fug=fug)
         hit = cache.get(key)
         if hit is not None:
             return hit
@@ -239,16 +243,17 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     # ---- template path: P&R one replica, stamp R copies, gap-fill ---------
     tpl_out = None
     ttimes: Dict[str, float] = {}
-    if pr_mode in ("auto", "template"):
-        tpl_out = _template_par(fug, g, spec, plan, seed, place_effort,
-                                cache, pr_mode, ttimes)
+    if opts.pr_mode in ("auto", "template"):
+        tpl_out = _template_par(fug, g, spec, plan, opts.seed,
+                                opts.place_effort, cache, opts.pr_mode,
+                                ttimes)
 
     use_template = False
     if tpl_out is not None:
         achieved = tpl_out[3].replicas
-        need = plan.replicas if pr_mode == "template" else \
-            math.ceil(min_template_fill * plan.replicas)
-        use_template = pr_mode == "template" or achieved >= need
+        need = plan.replicas if opts.pr_mode == "template" else \
+            math.ceil(opts.min_template_fill * plan.replicas)
+        use_template = opts.pr_mode == "template" or achieved >= need
 
     if not use_template:
         # ---- joint path: anneal all replicas, congestion back-off ---------
@@ -262,8 +267,8 @@ def jit_compile(kernel: Union[str, Callable, DFG],
         while replicas >= 1:
             try:
                 t0 = time.perf_counter()
-                placement = place(fug, spec, replicas=replicas, seed=seed,
-                                  effort=place_effort)
+                placement = place(fug, spec, replicas=replicas,
+                                  seed=opts.seed, effort=opts.place_effort)
                 t_place = (time.perf_counter() - t0) * 1e3
                 t0 = time.perf_counter()
                 routing = route(fug, spec, placement, replicas=replicas)

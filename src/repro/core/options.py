@@ -1,0 +1,77 @@
+"""Compile options — ONE frozen, hashable object instead of a knob soup.
+
+Every tunable the JIT pipeline accepts used to travel as loose keyword
+arguments (``jit_compile(source, spec, max_replicas=..., seed=...,
+place_effort=..., pr_mode=..., min_template_fill=..., ...)``) and was
+re-assembled into an ad-hoc tuple inside ``make_cache_key``.  The Session
+API collapses them into :class:`CompileOptions`:
+
+  * it is **frozen** (hashable, comparable) — a CompileOptions value can key
+    a dict, deduplicate in-flight builds (the Session's single-flight map),
+    and be stored on a Program for later rebuilds (shed / re-inflate);
+  * it **is the cache-key tail**: :meth:`CompileOptions.key_tail` is the
+    canonical serialization hashed into the compile-cache key, so "what can
+    change the produced artifact" and "what the API accepts" are the same
+    object by construction;
+  * validation happens once, at construction, instead of at the top of
+    every entry point.
+
+``n_inputs``/``name`` describe the *kernel* (how to trace a python
+callable), not the build — they ride along for convenience but are
+deliberately excluded from :meth:`key_tail` (the DFG fingerprint already
+covers kernel identity, and names never key anything).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# auto mode accepts the template path when it reaches this fraction of the
+# planned replica count (1.0 restores exact-parity-or-fallback semantics);
+# below it the joint annealer runs and the better artifact wins
+DEFAULT_MIN_TEMPLATE_FILL = 0.95
+
+_PR_MODES = ("auto", "template", "joint")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Everything a caller can turn on the JIT pipeline, in one value.
+
+    Fields mirror the historical ``jit_compile`` keywords exactly, so the
+    migration is mechanical (see ROADMAP "Runtime v2" migration table).
+    """
+    n_inputs: Optional[int] = None       # arity when tracing a python callable
+    name: Optional[str] = None           # kernel display name (never keyed)
+    max_replicas: Optional[int] = None   # cap on resource-aware replication
+    seed: int = 0                        # placement RNG seed
+    place_effort: float = 1.0            # annealer effort multiplier
+    pr_mode: str = "auto"                # auto | template | joint
+    min_template_fill: float = DEFAULT_MIN_TEMPLATE_FILL
+
+    def __post_init__(self) -> None:
+        if self.pr_mode not in _PR_MODES:
+            raise ValueError(f"pr_mode must be auto|template|joint, "
+                             f"got {self.pr_mode!r}")
+        if not 0.0 < self.min_template_fill <= 1.0:
+            raise ValueError(f"min_template_fill must be in (0, 1], "
+                             f"got {self.min_template_fill!r}")
+
+    # ---------------------------------------------------------------- keying
+    def key_tail(self) -> str:
+        """Canonical serialization of every artifact-changing knob.
+
+        ``max_replicas`` is absent on purpose: the cache key normalizes the
+        free-resource snapshot *and* the cap through the replication plan
+        they jointly imply (see :func:`repro.core.cache.make_cache_key`), so
+        the plan — not the raw cap — is what gets hashed.  The format
+        matches the pre-Session ad-hoc tuple byte for byte, so existing
+        disk-cache tiers stay warm across the API migration."""
+        return (f"{self.seed}:{self.place_effort:g}:{self.pr_mode}:"
+                f"{self.min_template_fill:g}")
+
+    def replace(self, **changes) -> "CompileOptions":
+        """A copy with ``changes`` applied (frozen dataclasses can't mutate;
+        the scheduler uses this to re-target ``max_replicas`` on resize)."""
+        return dataclasses.replace(self, **changes)

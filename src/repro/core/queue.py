@@ -87,11 +87,15 @@ class CommandQueue:
     """
 
     def __init__(self, context: "Context", in_order: bool = True,
-                 use_overlay_executor: bool = False):
+                 use_overlay_executor: bool = False,
+                 tenant: Optional[str] = None):
         self.ctx = context
         self.device = context.device
         self.in_order = in_order
         self.use_overlay_executor = use_overlay_executor
+        # which tenant's submission stream this is (the Session keeps one
+        # queue per (tenant, device)); purely a label for profiles/dashboards
+        self.tenant = tenant
         self.events: List[Event] = []
         self._last_event: Optional[Event] = None
         self._fence: Optional[Event] = None    # last barrier, both flavours
@@ -175,24 +179,28 @@ class CommandQueue:
 
         config_id = self._config_id(ck)
         exec_us = self._exec_model_us(ck, kernel.work_items)
-        t_backfill = self._earliest_gap(ready, exec_us)
-        if self._active_config_at(t_backfill) == config_id:
-            # the overlay already holds this configuration at that point of
-            # the timeline: slot in, no reconfiguration
-            t_submit, config_us = t_backfill, 0.0
-        else:
-            # loading a bitstream mid-history would invalidate the config
-            # every later-scheduled kernel observed — append to the end,
-            # where a matching live config still costs nothing
-            t_submit = max(ready, self._timeline_end())
-            if self._active_config_at(t_submit) == config_id:
-                config_us = 0.0
+        # gap scan + booking are one atomic step: per-tenant queues run on
+        # independent host threads under a Session, and a torn scan would
+        # let two kernels claim the same idle gap
+        with self.ctx.timeline_lock:
+            t_backfill = self._earliest_gap(ready, exec_us)
+            if self._active_config_at(t_backfill) == config_id:
+                # the overlay already holds this configuration at that
+                # point of the timeline: slot in, no reconfiguration
+                t_submit, config_us = t_backfill, 0.0
             else:
-                config_us = ck.bitstream.load_time_us()
-                self.ctx._config_switches.append((t_submit, config_id))
-        dur = config_us + exec_us
-        bisect.insort(self.ctx._engine_busy, (t_submit, t_submit + dur))
-        self.ctx._engine_end = max(self.ctx._engine_end, t_submit + dur)
+                # loading a bitstream mid-history would invalidate the
+                # config every later-scheduled kernel observed — append to
+                # the end, where a matching live config still costs nothing
+                t_submit = max(ready, self._timeline_end())
+                if self._active_config_at(t_submit) == config_id:
+                    config_us = 0.0
+                else:
+                    config_us = ck.bitstream.load_time_us()
+                    self.ctx._config_switches.append((t_submit, config_id))
+            dur = config_us + exec_us
+            bisect.insort(self.ctx._engine_busy, (t_submit, t_submit + dur))
+            self.ctx._engine_end = max(self.ctx._engine_end, t_submit + dur)
 
         ev = Event(kernel_name=ck.name, t_queued_us=t_queued,
                    t_submit_us=t_submit, config_us=config_us,
@@ -231,7 +239,8 @@ class CommandQueue:
         done, self.events = self.events, []
         for ev in done:
             ev.deps = ()
-        self._compact_timeline()
+        with self.ctx.timeline_lock:
+            self._compact_timeline()
         return done
 
     def _compact_timeline(self) -> None:
@@ -267,7 +276,8 @@ class CommandQueue:
         return n / (span * 1e-6) if span > 0 else 0.0
 
     def profile(self) -> List[dict]:
-        return [dict(kernel=e.kernel_name, queued=e.t_queued_us,
+        return [dict(kernel=e.kernel_name, tenant=self.tenant,
+                     queued=e.t_queued_us,
                      submit=e.t_submit_us, config=e.config_us,
                      start=e.t_start_us, end=e.t_end_us)
                 for e in self.events]

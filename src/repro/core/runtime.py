@@ -21,23 +21,39 @@ On top sit the serving-layer pieces:
     artifacts in milliseconds instead of recompiling;
   * :class:`repro.core.queue.CommandQueue` — in/out-of-order kernel queues
     with Event timestamps (see that module);
-  * :class:`Scheduler` — multi-device placement: an incoming kernel lands on
-    the device with the most free fabric; when nothing fits, the scheduler
-    sheds replicas from the busiest device's largest resident program to
-    make room (time-multiplexing the FU array across tenants).
+  * :class:`Scheduler` — multi-device placement, **queue-aware** since the
+    Session API: devices are ranked by modelled makespan (engine-timeline
+    end + pending reconfiguration charge + in-flight compile estimates),
+    not free fabric alone; when nothing fits, the scheduler sheds replicas
+    from resident programs — lowest-priority tenant first — to make room
+    (time-multiplexing the FU array across tenants).
+
+Builds may run on the Session's worker pool, so the ledger is guarded:
+every Context carries a reentrant ``lock`` held across its compile+debit
+and release+credit paths, and the Scheduler serializes fleet-level
+placement/shedding/re-inflation under one fleet lock (lock order is always
+fleet lock → context lock; ``Program.release`` takes only the context lock
+and fires the re-inflation hook *after* dropping it).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.cache import JITCache
+from repro.core.cache import JITCache, kernel_fingerprint
 from repro.core.jit import CompiledKernel, jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
+
+# modelled compile-time guess (µs) for a kernel the fleet has never built —
+# the order of a cold template build; refined per kernel by an EWMA of
+# observed build times as soon as one real build lands
+DEFAULT_BUILD_EST_US = 50_000.0
 
 
 class RuntimeError_(RuntimeError):
@@ -113,85 +129,147 @@ class Context:
         self.programs: List["Program"] = []
         self.reserved_fus = 0
         self.reserved_io = 0
+        # guards the device ledger + resident-program list: Session builds
+        # run on a worker pool, and an unguarded release() racing a build
+        # (or a concurrent release()) could double-credit the ledger
+        self.lock = threading.RLock()
         # called with the released Program after its fabric is credited back;
-        # the Scheduler hooks this to re-inflate shed programs
+        # the Scheduler hooks this to re-inflate shed programs.  Fired
+        # OUTSIDE the context lock (the hook takes the fleet lock; taking it
+        # under the context lock would invert the fleet→context lock order)
         self.on_release: Optional[Callable[["Program"], None]] = None
         # modelled overlay-engine timeline, shared by every CommandQueue on
         # this context: busy intervals (sorted), the configuration-switch
-        # history (ascending), and the running end-of-timeline
+        # history (ascending), and the running end-of-timeline.  Queues on
+        # different host threads (one per tenant under a Session) book onto
+        # it under timeline_lock — a torn gap-scan would double-book the
+        # engine
+        self.timeline_lock = threading.RLock()
         self._engine_busy: List[tuple] = []        # [(start_us, end_us)]
         self._config_switches: List[tuple] = []    # [(t_us, config_id)] asc
         self._engine_end = 0.0
+        # modelled µs of JIT builds currently in flight toward this device
+        # (booked by the Session / Scheduler, always under the fleet lock) —
+        # the "compile-in-flight" term of the makespan ranking
+        self.pending_compile_us = 0.0
+
+    # ----------------------------------------------------------- modelling
+    @property
+    def engine_end_us(self) -> float:
+        """End of the device's modelled engine timeline (µs)."""
+        return self._engine_end
+
+    def projected_makespan_us(self) -> float:
+        """Modelled time at which work placed on this device NOW would get
+        the engine: timeline end, plus compile time of builds already in
+        flight toward the device, plus the pending reconfiguration charge —
+        a newly placed kernel almost always needs its own configuration
+        loaded, estimated as the mean bitstream-load time of the resident
+        programs (zero on a never-configured device, where the first load
+        is paid wherever the kernel lands and so ranks no device apart)."""
+        t = self._engine_end + self.pending_compile_us
+        # snapshot: this is called lock-free from the Session's submit path
+        # (book_inflight), racing releases that mutate self.programs
+        progs = list(self.programs)
+        if self._config_switches and progs:
+            t += (sum(p.compiled.bitstream.load_time_us()
+                      for p in progs) / len(progs))
+        return t
 
     # ----------------------------------------------------------- programs
     def build_program(self, source: Union[str, Callable],
                       n_inputs: Optional[int] = None,
                       max_replicas: Optional[int] = None,
-                      name: Optional[str] = None) -> "Program":
+                      name: Optional[str] = None,
+                      opts: Optional[CompileOptions] = None,
+                      tenant: Optional[str] = None) -> "Program":
         """clBuildProgram: JIT-compile against the *currently free* overlay
         resources exposed by the device, then debit the ledger with the
-        plan's FU/IO usage (credited back by :meth:`Program.release`)."""
-        t0 = time.perf_counter()
-        ck = jit_compile(source, self.device.spec, n_inputs=n_inputs,
-                         name=name, max_replicas=max_replicas,
-                         fu_headroom=self.device.fu_used,
-                         io_headroom=self.device.io_used,
-                         cache=self.cache)
-        build_ms = (time.perf_counter() - t0) * 1e3
-        self.device.debit(ck.plan.fus_used, ck.plan.io_used)
-        prog = Program(self, ck, build_ms, source=source,
-                       build_kwargs=dict(n_inputs=n_inputs, name=name))
-        self.programs.append(prog)
-        return prog
+        plan's FU/IO usage (credited back by :meth:`Program.release`).
+
+        ``opts`` is the canonical way to tune the build; the loose keywords
+        are a legacy shim folded into a CompileOptions when it is absent.
+        Compile + debit happen under the context lock, so the headroom a
+        build plans against cannot be invalidated mid-pipeline by a
+        concurrent build or release on the same device."""
+        if opts is None:
+            opts = CompileOptions(n_inputs=n_inputs, name=name,
+                                  max_replicas=max_replicas)
+        with self.lock:
+            t0 = time.perf_counter()
+            ck = jit_compile(source, self.device.spec, opts=opts,
+                             fu_headroom=self.device.fu_used,
+                             io_headroom=self.device.io_used,
+                             cache=self.cache)
+            build_ms = (time.perf_counter() - t0) * 1e3
+            self.device.debit(ck.plan.fus_used, ck.plan.io_used)
+            prog = Program(self, ck, build_ms, source=source, opts=opts,
+                           tenant=tenant)
+            self.programs.append(prog)
+            return prog
 
     def reserve(self, fus: int, io: int = 0) -> None:
         """Model 'other logic' consuming fabric (paper Fig. 5)."""
-        self.device.debit(fus, io)
-        self.reserved_fus += fus
-        self.reserved_io += io
+        with self.lock:
+            self.device.debit(fus, io)
+            self.reserved_fus += fus
+            self.reserved_io += io
 
     def release(self, fus: int, io: int = 0) -> None:
         """Release a prior :meth:`reserve` (programs release themselves).
         Mirrors the debit-side validation: crediting more than the
         outstanding reservation would un-book fabric owned by resident
         programs and corrupt the ledger."""
-        if fus > self.reserved_fus or io > self.reserved_io:
-            raise RuntimeError_(
-                f"release of {fus} FUs / {io} IO exceeds outstanding "
-                f"reservation {self.reserved_fus} FUs / {self.reserved_io} "
-                f"IO")
-        self.device.credit(fus, io)
-        self.reserved_fus -= fus
-        self.reserved_io -= io
+        with self.lock:
+            if fus > self.reserved_fus or io > self.reserved_io:
+                raise RuntimeError_(
+                    f"release of {fus} FUs / {io} IO exceeds outstanding "
+                    f"reservation {self.reserved_fus} FUs / "
+                    f"{self.reserved_io} IO")
+            self.device.credit(fus, io)
+            self.reserved_fus -= fus
+            self.reserved_io -= io
 
     # -------------------------------------------------------------- queues
     def create_queue(self, in_order: bool = True,
-                     use_overlay_executor: bool = False):
+                     use_overlay_executor: bool = False,
+                     tenant: Optional[str] = None):
         from repro.core.queue import CommandQueue
         return CommandQueue(self, in_order=in_order,
-                            use_overlay_executor=use_overlay_executor)
+                            use_overlay_executor=use_overlay_executor,
+                            tenant=tenant)
 
     def ledger_consistent(self) -> bool:
         """Invariant: device usage == reservations + resident programs."""
-        fus = self.reserved_fus + sum(p.compiled.plan.fus_used
-                                      for p in self.programs)
-        io = self.reserved_io + sum(p.compiled.plan.io_used
-                                    for p in self.programs)
-        return (fus == self.device.fu_used and io == self.device.io_used
-                and 0 <= self.device.fu_used <= self.device.spec.n_fus
-                and 0 <= self.device.io_used <= self.device.spec.n_io)
+        with self.lock:
+            fus = self.reserved_fus + sum(p.compiled.plan.fus_used
+                                          for p in self.programs)
+            io = self.reserved_io + sum(p.compiled.plan.io_used
+                                        for p in self.programs)
+            return (fus == self.device.fu_used and io == self.device.io_used
+                    and 0 <= self.device.fu_used <= self.device.spec.n_fus
+                    and 0 <= self.device.io_used <= self.device.spec.n_io)
 
 
 class Program:
     def __init__(self, ctx: Context, ck: CompiledKernel, build_ms: float,
                  source: Union[str, Callable, None] = None,
-                 build_kwargs: Optional[Dict] = None):
+                 opts: Optional[CompileOptions] = None,
+                 tenant: Optional[str] = None):
         self.ctx = ctx
         self.compiled = ck
         self.build_ms = build_ms
         self.source = source
-        self.build_kwargs = build_kwargs or {}
+        # the exact options this program was built with — resize/re-inflate
+        # rebuilds derive theirs via opts.replace(max_replicas=...)
+        self.opts = opts if opts is not None else CompileOptions()
+        self.tenant = tenant
         self.released = False
+        # sticky owner intent: release() during a scheduler resize window
+        # (victim transiently non-resident, so the call no-ops) must not be
+        # lost when the resize re-seats the program — the scheduler honors
+        # it after the swap/restore (see Scheduler._resize)
+        self.release_requested = False
         # the replica count this program was first built at; shedding swaps a
         # smaller artifact into `compiled` but leaves this untouched, so the
         # scheduler knows how far to re-inflate once fabric frees up
@@ -210,16 +288,26 @@ class Program:
         return self.compiled.bitstream.load_time_us()
 
     def release(self) -> None:
-        """Credit the program's FUs/IO back to the device ledger."""
-        if self.released:
-            return
-        self.released = True
-        self.ctx.device.credit(self.compiled.plan.fus_used,
-                               self.compiled.plan.io_used)
-        if self in self.ctx.programs:
-            self.ctx.programs.remove(self)
-        if self.ctx.on_release is not None:
-            self.ctx.on_release(self)
+        """Credit the program's FUs/IO back to the device ledger.
+
+        Idempotent AND atomic: the released check-and-set happens under the
+        context's ledger lock, so two threads racing on release() (an owner
+        disconnecting while the scheduler resizes the same program on a
+        worker thread) cannot both credit the fabric back.  The scheduler's
+        re-inflation hook fires after the lock is dropped — it takes the
+        fleet lock, which must never be acquired under a context lock."""
+        with self.ctx.lock:
+            self.release_requested = True
+            if self.released:
+                return
+            self.released = True
+            self.ctx.device.credit(self.compiled.plan.fus_used,
+                                   self.compiled.plan.io_used)
+            if self in self.ctx.programs:
+                self.ctx.programs.remove(self)
+            hook = self.ctx.on_release
+        if hook is not None:
+            hook(self)
 
     def __enter__(self) -> "Program":
         return self
@@ -265,13 +353,22 @@ class Kernel:
 class Scheduler:
     """Resource-aware placement of incoming kernels onto a device fleet.
 
-    Placement policy: best fit by free fabric — devices are tried in
-    descending (free FUs, free IO) order, and ``build_program`` itself sheds
-    replicas to fit whatever is free (headroom + congestion back-off in the
-    JIT).  When *no* device can host even a single replica, the scheduler
-    frees fabric by halving the replica count of the largest resident
-    program on the busiest device, and retries — multi-tenant time
-    multiplexing of the FU array.
+    Placement is **queue-aware** (``policy="makespan"``, the default):
+    candidate devices are ranked by :meth:`Context.projected_makespan_us` —
+    modelled engine-timeline end, plus the estimated compile time of builds
+    already in flight toward the device, plus the pending reconfiguration
+    charge — with free fabric only as the tie-break.  An idle fleet
+    therefore ranks exactly like the historical best-fit-by-free-fabric
+    policy (``policy="free_fabric"``, kept for comparison and the
+    ``benchmarks/queue_sched_perf.py`` gate), but a fleet with deep queues
+    routes new tenants *around* the backlog instead of piling onto the
+    device that merely has the most free FUs.
+
+    When *no* device can host even a single replica, the scheduler frees
+    fabric by halving the replica count of a resident program and retries —
+    multi-tenant time multiplexing of the FU array.  Victims are chosen
+    lowest :meth:`tenant priority <set_priority>` first (then busiest
+    device, then largest footprint), so paying tenants degrade last.
 
     Shedding is symmetric: every ``Program.release()`` triggers
     :meth:`reinflate`, which grows shed programs back toward the replica
@@ -279,24 +376,49 @@ class Scheduler:
     into the owner's existing Program handle exception-safely, and both are
     re-stamps of the cached P&R template (no place/route stage runs) when
     the template path applies.
+
+    Fleet-level mutation (ranking snapshots, shedding, re-inflation) is
+    serialized under one reentrant fleet lock; each device's compile+debit
+    and release+credit run under that context's own ledger lock, so builds
+    bound for DIFFERENT devices overlap while two builds racing onto one
+    device serialize and the second re-plans against the first's debit.
+    Lock order is fleet lock → context lock, never the reverse.
     """
+
+    POLICIES = ("makespan", "free_fabric")
 
     def __init__(self, devices: Sequence[Device],
                  cache: Optional[JITCache] = None,
-                 persist_dir: Optional[str] = None):
+                 persist_dir: Optional[str] = None,
+                 policy: str = "makespan"):
         if not devices:
             raise ValueError("scheduler needs at least one device")
         if cache is not None and persist_dir is not None:
             raise ValueError(
                 "pass persist_dir OR an explicit cache (construct the cache "
                 "with JITCache(persist_dir=...) to combine them)")
+        if policy not in self.POLICIES:
+            raise ValueError(f"policy must be one of {self.POLICIES}, "
+                             f"got {policy!r}")
         self.cache = cache if cache is not None else \
             JITCache(persist_dir=persist_dir)
+        self.policy = policy
         self.contexts: Dict[str, Context] = {
             d.name: Context(d, cache=self.cache) for d in devices}
+        # tenant -> priority (higher keeps replicas longer); unknown
+        # tenants (and None) rank at 0
+        self.priorities: Dict[str, int] = {}
+        # kernel fingerprint -> EWMA of observed build time (µs); feeds the
+        # compile-in-flight term of the makespan ranking.  Guarded by its
+        # own small lock, NOT the fleet lock: Session.compile books its
+        # estimate at submit time and must never block behind a build that
+        # is holding the fleet lock for a full pipeline run
+        self._build_est: Dict[str, float] = {}
+        self._est_lock = threading.Lock()
+        self._lock = threading.RLock()
         # guards against recursive rebalancing: shedding and re-inflation
         # both release() programs mid-flight, which must not re-trigger the
-        # release hook
+        # release hook (only ever read/written under the fleet lock)
         self._rebalancing = False
         for ctx in self.contexts.values():
             ctx.on_release = self._on_release
@@ -305,36 +427,128 @@ class Scheduler:
     def devices(self) -> List[Device]:
         return [c.device for c in self.contexts.values()]
 
+    def set_priority(self, tenant: str, priority: int) -> None:
+        """Higher-priority tenants are shed last when the fleet is full."""
+        with self._lock:
+            self.priorities[tenant] = priority
+
+    # -------------------------------------------------------------- ranking
+    def _ranked(self, exclude: Optional[Tuple[Context, float]] = None
+                ) -> List[Context]:
+        """Candidate devices, best first, per the placement policy.
+
+        ``exclude`` backs a build's OWN in-flight booking out of the
+        ranking — otherwise the estimate a build posted for itself would
+        push that same build off its favoured device."""
+        ctxs = list(self.contexts.values())
+        if self.policy == "free_fabric":
+            return sorted(ctxs, key=lambda c: (c.device.fu_free,
+                                               c.device.io_free),
+                          reverse=True)
+
+        def key(c: Context):
+            t = c.projected_makespan_us()
+            if exclude is not None and c is exclude[0]:
+                t -= exclude[1]
+            return (t, -c.device.fu_free, -c.device.io_free)
+        return sorted(ctxs, key=key)
+
+    # --------------------------------------------- in-flight compile model
+    def estimate_build_us(self, fingerprint: str) -> float:
+        """Modelled compile time for a kernel (EWMA of past builds)."""
+        with self._est_lock:
+            return self._build_est.get(fingerprint, DEFAULT_BUILD_EST_US)
+
+    def _note_build_us(self, fingerprint: str, us: float) -> None:
+        with self._est_lock:
+            prev = self._build_est.get(fingerprint)
+            self._build_est[fingerprint] = \
+                us if prev is None else 0.5 * prev + 0.5 * us
+
+    def book_inflight(self, fingerprint: str) -> Tuple[Context, float]:
+        """Charge a build's estimated compile time to the device the
+        ranking currently favours; the Session books this at submit time so
+        *later* submissions see the queued compile in the makespan model.
+        Returns a token for :meth:`release_inflight`.
+
+        The ranking read here is advisory (a placement *hint*, re-ranked
+        for real inside :meth:`build_opts`), so it deliberately skips the
+        fleet lock — booking must not block behind a build that is holding
+        it for a full pipeline run."""
+        est = self.estimate_build_us(fingerprint)
+        ctx = self._ranked()[0]
+        with self._est_lock:
+            ctx.pending_compile_us += est
+        return ctx, est
+
+    def release_inflight(self, token: Tuple[Context, float]) -> None:
+        ctx, est = token
+        with self._est_lock:
+            ctx.pending_compile_us = max(0.0, ctx.pending_compile_us - est)
+
     # ------------------------------------------------------------ placement
     def build(self, source: Union[str, Callable],
               n_inputs: Optional[int] = None,
               name: Optional[str] = None,
               max_replicas: Optional[int] = None,
               max_shed_rounds: int = 8) -> Program:
-        """Place + JIT-build ``source`` on the best device; returns the
-        resident Program (release() it to free fabric)."""
+        """Legacy entry point — a thin shim folding the loose knobs into a
+        :class:`CompileOptions` and delegating to :meth:`build_opts` (the
+        Session core), so both paths exercise one implementation."""
+        return self.build_opts(
+            source, CompileOptions(n_inputs=n_inputs, name=name,
+                                   max_replicas=max_replicas),
+            max_shed_rounds=max_shed_rounds)
+
+    def build_opts(self, source: Union[str, Callable],
+                   opts: Optional[CompileOptions] = None,
+                   tenant: Optional[str] = None,
+                   max_shed_rounds: int = 8,
+                   inflight: Optional[Tuple[Context, float]] = None,
+                   fingerprint: Optional[str] = None) -> Program:
+        """Place + JIT-build ``source`` on the best device per the placement
+        policy; returns the resident Program (release() it to free fabric).
+        This is the core every entry point funnels into — ``Session.compile``
+        submits it to the worker pool, :meth:`build` calls it inline.
+
+        ``inflight`` is the booking token the Session posted at submit time
+        (see :meth:`book_inflight`); it is excluded from this build's own
+        ranking and stays booked until the Session releases it.
+        ``fingerprint`` passes the caller's already-computed
+        ``kernel_fingerprint`` (the EWMA namespace) so a python callable is
+        not traced a second time just for the estimate key."""
         from repro.core.jit import lower_to_dfg
         from repro.core.latency import LatencyError
         from repro.core.place import PlacementError
         from repro.core.route import RoutingError
 
+        opts = opts if opts is not None else CompileOptions()
+        # EWMA key: the SAME namespace Session.compile books estimates
+        # under, computed before lowering so str sources stay hash-only
+        fp = fingerprint if fingerprint is not None else \
+            kernel_fingerprint(source, n_inputs=opts.n_inputs,
+                               name=opts.name)
         # lower to a DFG once: each per-device placement probe (and every
-        # shed retry) reuses it instead of re-parsing / re-tracing
-        source = lower_to_dfg(source, n_inputs, name, parse_source=True)
+        # shed retry) reuses it instead of re-parsing / re-tracing.  Done
+        # OUTSIDE the fleet lock — only ranking and shedding serialize;
+        # per-device compile+debit is guarded by each context's own lock,
+        # so builds bound for different devices overlap
+        source = lower_to_dfg(source, opts.n_inputs, opts.name,
+                              parse_source=True)
 
         last_err: Optional[Exception] = None
         for _ in range(max_shed_rounds + 1):
-            for ctx in sorted(self.contexts.values(),
-                              key=lambda c: (c.device.fu_free,
-                                             c.device.io_free),
-                              reverse=True):
+            with self._lock:
+                order = self._ranked(exclude=inflight)
+            for ctx in order:
                 try:
-                    return ctx.build_program(source, n_inputs=n_inputs,
-                                             name=name,
-                                             max_replicas=max_replicas)
+                    prog = ctx.build_program(source, opts=opts,
+                                             tenant=tenant)
+                    self._note_build_us(fp, prog.build_ms * 1e3)
+                    return prog
                 except (PlacementError, RoutingError, LatencyError) as e:
                     last_err = e
-                    self.cache.stats.build_failures += 1
+                    self.cache.note_build_failure()
             if not self._shed_one():
                 break
         raise SchedulerError(
@@ -342,36 +556,47 @@ class Scheduler:
             f"last error: {last_err}")
 
     def _shed_one(self) -> bool:
-        """Halve the replicas of the largest resident program on the busiest
-        device. Returns False when nothing sheddable remains (or the shed
-        rebuild itself fails, in which case the victim is restored)."""
-        candidates = [(p, ctx) for ctx in self.contexts.values()
-                      for p in ctx.programs
-                      if p.compiled.plan.replicas > 1]
-        if not candidates:
-            return False
-        # busiest device first, then largest FU footprint
-        victim, ctx = max(candidates,
-                          key=lambda pc: (pc[1].device.fu_used,
-                                          pc[0].compiled.plan.fus_used))
-        target = max(1, victim.compiled.plan.replicas // 2)
-        return self._resize(victim, ctx, target, require_growth=False)
+        """Halve the replicas of one resident program to make room.  The
+        victim is the lowest-priority tenant's program (ties: busiest
+        device, then largest FU footprint) — equal- or higher-priority
+        programs are still sheddable as a last resort, so an unprioritized
+        fleet behaves exactly as before and a full fleet always yields
+        SOME fabric rather than failing the request.  Returns False when
+        nothing sheddable remains (or the shed rebuild itself fails, in
+        which case the victim is restored)."""
+        with self._lock:
+            candidates = [(p, ctx) for ctx in self.contexts.values()
+                          for p in ctx.programs
+                          if p.compiled.plan.replicas > 1]
+            if not candidates:
+                return False
+            victim, ctx = min(
+                candidates,
+                key=lambda pc: (self.priorities.get(pc[0].tenant, 0),
+                                -pc[1].device.fu_used,
+                                -pc[0].compiled.plan.fus_used))
+            target = max(1, victim.compiled.plan.replicas // 2)
+            return self._resize(victim, ctx, target, require_growth=False)
 
     # -------------------------------------------------------- re-inflation
     def _on_release(self, _prog: Program) -> None:
         """Release hook: freed fabric is an opportunity to grow shed
-        programs back toward their planned replica count."""
-        if not self._rebalancing:
-            self.reinflate()
+        programs back toward their planned replica count.  Takes the fleet
+        lock first, so a hook firing on one thread while another thread is
+        mid-shed waits for the shed to finish instead of interleaving."""
+        with self._lock:
+            if not self._rebalancing:
+                self.reinflate()
 
     def reinflate(self) -> int:
         """Re-stamp shed programs back toward their planned replica counts
         (ROADMAP open item).  With the P&R template cached, each growth is a
         re-stamp — no place/route stage runs.  Returns programs grown."""
-        grown = 0
-        while self._reinflate_one():
-            grown += 1
-        return grown
+        with self._lock:
+            grown = 0
+            while self._reinflate_one():
+                grown += 1
+            return grown
 
     def _reinflate_one(self) -> bool:
         candidates = [(p, ctx) for ctx in self.contexts.values()
@@ -413,56 +638,86 @@ class Scheduler:
         """Rebuild ``victim`` at ``max_replicas=target`` and swap the new
         artifact into the owner's handle, exception-safely: on any failure
         (or, for re-inflation, no actual growth) the victim's residency and
-        ledger debit are restored unchanged."""
+        ledger debit are restored unchanged.
+
+        Runs entirely under the fleet lock (and takes the device's ledger
+        lock around each release/re-debit window), so a concurrent
+        ``Program.release()`` of the same victim on another thread either
+        completes before the resize starts or blocks until the victim is
+        resident again — it can never double-credit the ledger in between.
+        """
         from repro.core.latency import LatencyError
         from repro.core.place import PlacementError
         from repro.core.route import RoutingError
-        old = victim.compiled
-        prev = self._rebalancing
-        self._rebalancing = True
+        with self._lock:
+            old = victim.compiled
+            prev = self._rebalancing
+            self._rebalancing = True
 
-        def restore() -> None:
-            # restore the victim's residency rather than destroying a
-            # tenant's program — its fabric is free again at this point, so
-            # the re-debit holds
-            ctx.device.debit(old.plan.fus_used, old.plan.io_used)
-            victim.released = False
-            ctx.programs.append(victim)
+            def restore() -> None:
+                # restore the victim's residency rather than destroying a
+                # tenant's program — its fabric is free again at this point,
+                # so the re-debit holds
+                with ctx.lock:
+                    ctx.device.debit(old.plan.fus_used, old.plan.io_used)
+                    victim.released = False
+                    ctx.programs.append(victim)
 
-        try:
-            victim.release()
-            rebuilt: Optional[Program] = None
             try:
-                rebuilt = ctx.build_program(victim.source,
-                                            max_replicas=target,
-                                            **victim.build_kwargs)
-            except (PlacementError, RoutingError, LatencyError):
-                pass
-            except BaseException:
-                # unexpected rebuild failure must still restore the tenant
-                # before propagating (the failed build debited nothing)
-                restore()
-                raise
-            if rebuilt is None or (require_growth and
-                                   rebuilt.compiled.plan.replicas <=
-                                   old.plan.replicas):
-                if rebuilt is not None:   # too-small rebuild: free it first
-                    rebuilt.release()
-                restore()
-                if require_growth:
-                    victim.grow_failed_free = (ctx.device.fu_free,
-                                               ctx.device.io_free)
-                return False
-            # swap the artifact into the victim in place: handles the owner
-            # already holds stay valid and resident
-            victim.compiled = rebuilt.compiled
-            victim.build_ms = rebuilt.build_ms
-            victim.released = False
-            victim.grow_failed_free = None
-            ctx.programs[ctx.programs.index(rebuilt)] = victim
-            return True
-        finally:
-            self._rebalancing = prev
+                with ctx.lock:
+                    if victim.released:
+                        return False        # the owner beat us to it
+                    victim.release()
+                    # that was OUR administrative release; a True from here
+                    # on means the owner asked for release mid-resize
+                    victim.release_requested = False
+                rebuilt: Optional[Program] = None
+                try:
+                    rebuilt = ctx.build_program(
+                        victim.source,
+                        opts=victim.opts.replace(max_replicas=target),
+                        tenant=victim.tenant)
+                except (PlacementError, RoutingError, LatencyError):
+                    pass
+                except BaseException:
+                    # unexpected rebuild failure must still restore the
+                    # tenant before propagating (the failed build debited
+                    # nothing)
+                    restore()
+                    raise
+                if rebuilt is None or (require_growth and
+                                       rebuilt.compiled.plan.replicas <=
+                                       old.plan.replicas):
+                    if rebuilt is not None:  # too-small rebuild: free it
+                        rebuilt.release()
+                    restore()
+                    if require_growth:
+                        victim.grow_failed_free = (ctx.device.fu_free,
+                                                   ctx.device.io_free)
+                    return False
+                # swap the artifact into the victim in place: handles the
+                # owner already holds stay valid and resident
+                with ctx.lock:
+                    victim.compiled = rebuilt.compiled
+                    victim.build_ms = rebuilt.build_ms
+                    victim.released = False
+                    victim.grow_failed_free = None
+                    ctx.programs[ctx.programs.index(rebuilt)] = victim
+                return True
+            finally:
+                # honor a release the owner requested while the victim was
+                # transiently non-resident (their call no-op'd on the
+                # released flag): drop the re-seated program now.  The
+                # rebalance flag is restored FIRST so the release's hook
+                # can offer the freed fabric to shed programs (when this
+                # resize is itself part of a reinflate pass, prev is True
+                # and the enclosing loop picks the fabric up instead)
+                with ctx.lock:
+                    pending = (victim.release_requested
+                               and not victim.released)
+                self._rebalancing = prev
+                if pending:
+                    victim.release()
 
     # ----------------------------------------------------------- inspection
     def ledger(self) -> Dict[str, Dict[str, int]]:
@@ -470,6 +725,15 @@ class Scheduler:
                            fu_free=c.device.fu_free,
                            io_used=c.device.io_used,
                            io_free=c.device.io_free,
+                           programs=len(c.programs))
+                for name, c in self.contexts.items()}
+
+    def makespan_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-device view of the quantities the makespan ranking consumes
+        (serving dashboards + ``benchmarks/queue_sched_perf.py``)."""
+        return {name: dict(engine_end_us=c.engine_end_us,
+                           pending_compile_us=c.pending_compile_us,
+                           projected_makespan_us=c.projected_makespan_us(),
                            programs=len(c.programs))
                 for name, c in self.contexts.items()}
 

@@ -1,0 +1,316 @@
+"""Session — the unified async host API over the overlay JIT runtime.
+
+The paper's core claim is that overlay JIT compilation is cheap enough to
+happen *during serving*.  The pieces below the Session already deliver that
+(template-stamped P&R, the multi-tier JIT cache, the modelled command
+queues); what was missing is a host API that lets compilation **overlap**
+execution the way the paper's Fig. 5 flow draws it.  A Session owns the
+whole serving stack — Platform/devices, the queue-aware :class:`Scheduler`,
+one fleet-wide :class:`JITCache` (with optional disk tier), and per-tenant
+:class:`CommandQueue` s — behind two calls:
+
+  * :meth:`Session.compile` submits the JIT pipeline to a worker pool and
+    returns a :class:`KernelFuture` immediately — no compiler stage runs on
+    the caller's thread.  Identical concurrent requests are **single-flight
+    deduplicated**: the second caller gets a future onto the first caller's
+    in-flight build (counted in ``cache.stats.singleflight_hits``) and the
+    pipeline runs once.
+  * :meth:`Session.enqueue` chains a kernel execution onto the compile:
+    the returned Event carries a dependency on the build's *compile event*,
+    so its config/exec timestamps sit **after** the modelled JIT-compile
+    finish time — serving latency accounts for compile latency exactly as
+    Fig. 5 implies, and a warm-cache compile (sub-millisecond) costs the
+    timeline nothing.
+
+Timestamps: the Session pins µs-time zero at construction; compile events
+are stamped with real wall-clock build completion relative to that epoch,
+which is what makes compile latency and the modelled device timeline share
+one clock.
+
+Placement is the Scheduler's queue-aware makespan ranking (see
+:mod:`repro.core.runtime`); per-tenant priorities (:meth:`set_priority`)
+decide who gets shed first when the fleet is full.
+
+Single-flight sharing means two tenants compiling the same (kernel, opts)
+while the first build is still in flight resolve to the SAME resident
+Program — releasing it releases it for both, exactly like two references
+to one cache entry.  Tenants that need private residency should compile
+distinct kernels (or wait for the first build to land, which makes the
+second a near-free cache-hit build of its own Program).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+import time
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from repro.core.cache import JITCache, kernel_fingerprint
+from repro.core.options import CompileOptions
+from repro.core.queue import CommandQueue, Event, user_event
+from repro.core.runtime import (Buffer, Context, Device, Platform,  # noqa: F401 — Device re-exported for Session users
+                                Program, Scheduler)
+
+
+class SessionError(RuntimeError):
+    pass
+
+
+class KernelFuture:
+    """Handle to an asynchronous JIT build; resolves to a resident
+    :class:`~repro.core.runtime.Program`.
+
+    Futures returned for deduplicated requests share one underlying build
+    (and therefore one Program and one compile event).  ``result()`` blocks
+    until the pipeline lands; :meth:`compile_event` is the build's finish
+    time on the Session's modelled clock — the event executions chain on.
+    """
+
+    def __init__(self, session: "Session", key: Tuple,
+                 fut: "concurrent.futures.Future[Program]", record: Dict,
+                 tenant: Optional[str]):
+        self._session = session
+        self._fut = fut
+        self._record = record          # shared across deduplicated futures
+        self.key = key                 # single-flight identity
+        self.tenant = tenant
+        self.t_request_us = session.now_us()
+
+    # ------------------------------------------------------ future protocol
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None) -> Program:
+        return self._fut.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._fut.exception(timeout)
+
+    def add_done_callback(self, fn) -> None:
+        self._fut.add_done_callback(lambda _f: fn(self))
+
+    # ----------------------------------------------------------- modelling
+    @property
+    def program(self) -> Program:
+        """The resident Program (blocks until the build lands)."""
+        return self.result()
+
+    def compile_event(self) -> Event:
+        """A pre-completed event at the build's modelled finish time (µs on
+        the Session clock).  Blocks until the build lands — the event's
+        timestamp does not exist before then."""
+        prog = self.result()
+        return user_event(self._record["t_done_us"],
+                          name=f"jit:{prog.compiled.name}")
+
+    @property
+    def compile_us(self) -> float:
+        """Modelled submit→finish compile latency (blocks until done)."""
+        self.result()
+        return self._record["t_done_us"] - self._record["t_submit_us"]
+
+
+class Session:
+    """The single facade a serving host talks to (see module docstring).
+
+    >>> with Session([Device("ovl0", spec), Device("ovl1", spec)]) as sess:
+    ...     fut = sess.compile(SOURCE, CompileOptions(max_replicas=8),
+    ...                        tenant="tenant-a")
+    ...     ev = sess.enqueue(fut, x)          # waits for + chains on compile
+    ...     y = ev.wait()[0].read()
+    """
+
+    def __init__(self, devices: Optional[Sequence[Device]] = None,
+                 cache: Optional[JITCache] = None,
+                 persist_dir: Optional[str] = None,
+                 max_workers: int = 4,
+                 policy: str = "makespan",
+                 use_overlay_executor: bool = False):
+        self.scheduler = Scheduler(
+            list(devices) if devices else Platform.default().devices,
+            cache=cache, persist_dir=persist_dir, policy=policy)
+        self.platform = Platform(list(self.scheduler.devices))
+        self.use_overlay_executor = use_overlay_executor
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="jit")
+        # reentrant: a future that completes before its done-callback is
+        # registered runs the callback INLINE on the registering thread,
+        # which then re-enters this lock through _forget
+        self._lock = threading.RLock()
+        # single-flight map: (kernel fingerprint, opts) -> (future, record).
+        # Entries live only while the build is in flight; sequential repeat
+        # compiles are the JITCache's job, not this map's
+        self._inflight: Dict[Tuple, Tuple] = {}
+        self._queues: Dict[Tuple[str, str], CommandQueue] = {}
+        self._t0 = time.perf_counter()
+        self._closed = False
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def cache(self) -> JITCache:
+        return self.scheduler.cache
+
+    @property
+    def devices(self):
+        return self.scheduler.devices
+
+    @property
+    def contexts(self) -> Dict[str, Context]:
+        return self.scheduler.contexts
+
+    def now_us(self) -> float:
+        """Wall-clock µs on the Session's modelled clock (zero at init)."""
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def set_priority(self, tenant: str, priority: int) -> None:
+        self.scheduler.set_priority(tenant, priority)
+
+    # ------------------------------------------------------------- compile
+    def compile(self, source, opts: Optional[CompileOptions] = None,
+                tenant: Optional[str] = None) -> KernelFuture:
+        """Submit the JIT pipeline for ``source`` to the worker pool and
+        return immediately.  Requests identical in (kernel content, opts)
+        to a build still in flight join that build instead of starting a
+        second pipeline run (single-flight; the shared JITCache already
+        dedups *sequential* repeats)."""
+        opts = opts if opts is not None else CompileOptions()
+        # outside the session lock: str sources hash without parsing, but a
+        # python callable is traced here (µs-scale, NOT a pipeline stage) —
+        # that must not stall concurrent compile()/enqueue() on the lock
+        fp = kernel_fingerprint(source, n_inputs=opts.n_inputs,
+                                name=opts.name)
+        key = (fp, opts)
+        with self._lock:
+            if self._closed:
+                raise SessionError("session is closed")
+            entry = self._inflight.get(key)
+            if entry is not None:
+                fut, record = entry
+                self.cache.stats.singleflight_hits += 1
+            else:
+                record = dict(t_submit_us=self.now_us(), t_start_us=None,
+                              t_done_us=None)
+                booking = self.scheduler.book_inflight(fp)
+                fut = self._pool.submit(self._build, source, opts, tenant,
+                                        fp, booking, record)
+                self._inflight[key] = (fut, record)
+        # registered outside the critical section: a build that failed or
+        # hit the cache instantly runs the callback inline, right here.
+        # _build's finally stamps t_done_us BEFORE the future resolves, so
+        # callbacks (and joiners) always see it set
+        if entry is None:
+            fut.add_done_callback(lambda _f, k=key: self._forget(k))
+        return KernelFuture(self, key, fut, record, tenant)
+
+    def _build(self, source, opts: CompileOptions, tenant: Optional[str],
+               fp: str, booking, record: Dict) -> Program:
+        record["t_start_us"] = self.now_us()
+        try:
+            return self.scheduler.build_opts(source, opts, tenant=tenant,
+                                             inflight=booking,
+                                             fingerprint=fp)
+        finally:
+            record["t_done_us"] = self.now_us()
+            self.scheduler.release_inflight(booking)
+
+    def _forget(self, key: Tuple) -> None:
+        with self._lock:
+            self._inflight.pop(key, None)
+
+    def build(self, source, opts: Optional[CompileOptions] = None,
+              tenant: Optional[str] = None) -> Program:
+        """Synchronous convenience: ``compile(...).result()``."""
+        return self.compile(source, opts, tenant=tenant).result()
+
+    # ------------------------------------------------------------- enqueue
+    def queue_for(self, tenant: Optional[str], device_name: str,
+                  in_order: Optional[bool] = None) -> CommandQueue:
+        """The (tenant, device) submission stream, created on first use —
+        out-of-order by default so independent tenants backfill each
+        other's idle gaps.  ``in_order=None`` (the default, and what
+        ``enqueue`` uses) accepts whichever flavor exists; an EXPLICIT
+        flavor that contradicts the existing queue's is an error, not a
+        silent hand-back — kernels the caller expected to serialize must
+        not quietly backfill."""
+        key = (tenant or "default", device_name)
+        with self._lock:
+            q = self._queues.get(key)
+            if q is None:
+                q = self.scheduler.contexts[device_name].create_queue(
+                    in_order=bool(in_order),
+                    use_overlay_executor=self.use_overlay_executor,
+                    tenant=key[0])
+                self._queues[key] = q
+            elif in_order is not None and q.in_order != in_order:
+                raise SessionError(
+                    f"queue for {key} already exists with "
+                    f"in_order={q.in_order}; cannot reopen with "
+                    f"in_order={in_order}")
+            return q
+
+    def enqueue(self, handle: Union[KernelFuture, Program], *args,
+                wait_for: Sequence[Event] = (),
+                tenant: Optional[str] = None) -> Event:
+        """Run a kernel on its program's device queue.
+
+        With a :class:`KernelFuture` handle, execution is chained onto the
+        build: the kernel's event depends on the compile event, so it
+        cannot submit (nor backfill) before the modelled compile-finish
+        time — compile latency is on the serving timeline.  ``args`` are
+        Buffers or arrays (arrays are wrapped)."""
+        deps = tuple(wait_for)
+        if isinstance(handle, KernelFuture):
+            prog = handle.result()     # the host needs the artifact to run
+            deps = deps + (handle.compile_event(),)
+            tenant = tenant if tenant is not None else handle.tenant
+        else:
+            prog = handle
+            tenant = tenant if tenant is not None else prog.tenant
+        bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in args]
+        q = self.queue_for(tenant, prog.ctx.device.name)
+        return q.enqueue_kernel(prog.create_kernel().set_args(*bufs),
+                                wait_for=deps)
+
+    # ---------------------------------------------------------- inspection
+    def finish(self) -> float:
+        """Wait for every in-flight build, then return the fleet's modelled
+        makespan (µs): the max finish time across every tenant queue.
+        Build *errors* are not raised here — they surface on the owning
+        future's ``result()``."""
+        with self._lock:
+            pending = [fut for fut, _ in self._inflight.values()]
+        concurrent.futures.wait(pending)
+        with self._lock:
+            queues = list(self._queues.values())
+        return max((q.makespan_us for q in queues), default=0.0)
+
+    def ledger(self):
+        return self.scheduler.ledger()
+
+    def ledger_consistent(self) -> bool:
+        return self.scheduler.ledger_consistent()
+
+    def makespan_report(self):
+        return self.scheduler.makespan_report()
+
+    def stats(self) -> dict:
+        """One serving dashboard blob: cache tiers + per-device makespan."""
+        return dict(cache=self.cache.stats.as_dict(),
+                    devices=self.makespan_report(),
+                    inflight=len(self._inflight),
+                    queues=len(self._queues))
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._pool.shutdown(wait=wait)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -66,6 +66,30 @@ def test_backfill_never_runs_on_unconfigured_overlay():
     assert second.config_us == 0.0 or second.t_start_us >= first.t_submit_us
 
 
+def test_late_compile_event_blocks_backfill_into_earlier_gap():
+    """Satellite (ISSUE 4): a kernel chained onto a compile event that
+    finishes LATE must not backfill an idle gap earlier on the timeline —
+    even one where its configuration is already active.  The compile event
+    is a dependency like any other: ready time floors the gap search."""
+    ctx = _ctx()
+    prog = ctx.build_program(BENCHMARKS["poly1"][0])
+    q = ctx.create_queue(in_order=False)
+    first = q.enqueue_kernel(prog.create_kernel().set_args(Buffer(X)))
+    gate = user_event(t_end_us=10_000.0)
+    q.enqueue_kernel(prog.create_kernel().set_args(Buffer(X)),
+                     wait_for=[gate])          # busy [10000, ...]
+    # an attractive idle gap exists at [first.t_end_us, 10000) and poly1's
+    # config IS active there — but this kernel's JIT build only finishes at
+    # t=7000 on the modelled clock (Session.enqueue chains this event)
+    compile_done = user_event(t_end_us=7_000.0, name="jit:poly1")
+    late = q.enqueue_kernel(prog.create_kernel().set_args(Buffer(X)),
+                            wait_for=[compile_done])
+    assert first.t_end_us < 7_000.0            # the early gap was there
+    assert late.t_submit_us >= 7_000.0         # ...but compile gates it
+    assert late.config_us == 0.0               # config active: no reload
+    assert late.t_end_us < 10_000.0            # it DID backfill, post-gate
+
+
 def test_barrier_blocks_backfill_on_out_of_order_queue():
     """Regression: commands enqueued after a barrier must not start before
     it, even on an out-of-order queue with an idle gap to backfill."""
