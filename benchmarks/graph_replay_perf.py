@@ -1,0 +1,228 @@
+"""Graph capture & fused replay benchmark (ISSUE 5 acceptance benchmark).
+
+Replays one deterministic small-kernel serving trace — a single tenant's
+K-stage pointwise pipeline served for R requests — two ways on identical
+fleets:
+
+  * **node-at-a-time** (the pre-graph API): every stage compiled and
+    enqueued individually, so each request pays K configuration switches
+    as the overlay cycles through the stage configs;
+  * **graph replay**: the pipeline recorded once under
+    ``session.capture``, instantiated into fused overlay configurations
+    (here: one partition), and ``session.launch``\\ ed per request — the
+    config charge is paid once per *partition*, and a single-partition
+    steady state re-uses the loaded config across requests entirely.
+
+Timestamps follow the Session's Fig.-5 semantics: executions chain on their
+build's compile event, so the first request's timeline includes real JIT
+landing times and the makespan ratio varies a little run to run — but the
+gate margins are structural (node-at-a-time does K× the exec passes, K× the
+config switches and K cold builds), and the charge accounting is count-based
+and exact:
+
+  * total config charges must drop by at least the partition ratio K/P
+    (the ISSUE 5 acceptance bound: ≤ ceil(K/partition_size) charges per
+    replay vs K);
+  * fleet makespan must never be worse;
+  * results must be numerically identical between the two paths;
+  * re-instantiating the served graph must run no compiler stage.
+
+Recorded in the committed ``BENCH_compile.json`` under ``graph_replay``.
+
+    PYTHONPATH=src python benchmarks/graph_replay_perf.py \\
+        [--gate 1.0] [--json out.json] [--update BENCH_compile.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.cache import JITCache
+from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.core.runtime import Device
+from repro.core.session import Session
+
+SPEC_KW = dict(width=8, height=8, dsp_per_fu=2)
+OPTS = CompileOptions(max_replicas=4)
+N_ITEMS = 200_000
+N_REQUESTS = 4
+
+# the serving pipeline: K distinct small stages = K distinct configurations
+# (two paper kernels + four recorded pointwise stages)
+STAGES = [
+    ("poly1", BENCHMARKS["poly1"][0]),
+    ("cheb", BENCHMARKS["chebyshev"][0]),
+    ("scale", lambda x: x * 0.125 + 0.5),
+    ("sq", lambda x: x * x - 1.0),
+    ("mix", lambda x: x * 0.75 + x * x * 0.25),
+    ("out", lambda x: x * 2.0 - 3.0),
+]
+
+
+def _capture(sess: Session):
+    with sess.capture("tenant-a", name="serve_pipe") as g:
+        buf = g.input("x")
+        for name, src in STAGES:
+            buf = g.call(src, OPTS.replace(n_inputs=1, name=name), buf)
+    return g
+
+
+def _run(mode: str) -> Dict:
+    """Serve the trace in ``mode`` ("graph" | "nodewise"); modelled metrics."""
+    spec = OverlaySpec(**SPEC_KW)
+    rng = np.random.default_rng(0)
+    with Session([Device("ovl0", spec)], cache=JITCache(capacity=64)) as sess:
+        g = _capture(sess)
+        gx = sess.instantiate(g) if mode == "graph" else None
+        outs = []
+        for _ in range(N_REQUESTS):
+            x = rng.uniform(-1, 1, N_ITEMS).astype(np.float32)
+            ev = sess.launch(gx, x) if mode == "graph" else \
+                sess.launch_nodewise(g, x)
+            outs.append((x, ev.wait()[0].read()))
+        charges = sess.config_charges()
+        makespan = max(c.engine_end_us for c in sess.contexts.values())
+        result = dict(
+            mode=mode, stages=len(STAGES), requests=N_REQUESTS,
+            partitions=gx.n_partitions if gx is not None else len(STAGES),
+            config_charges=charges["charges"],
+            config_us=round(charges["config_us"], 2),
+            makespan_us=round(makespan, 1),
+            compile_misses=sess.cache.stats.misses)
+        if gx is not None:
+            # repeat instantiation at the same fleet state must be a warm
+            # cache hit: release the exec, re-instantiate, no compiler stage
+            gx.release()
+            misses = sess.cache.stats.misses
+            sess.instantiate(g).result()
+            result["reinstantiate_misses"] = sess.cache.stats.misses - misses
+        return result, outs
+
+
+def bench() -> Dict:
+    # a throwaway build absorbs process-wide first-compile costs (module
+    # imports, numpy warmup) that would otherwise land entirely in the
+    # first measured path's compile-event timestamps.  It uses no cache,
+    # so both measured runs still cold-build every one of their kernels
+    jit_compile(BENCHMARKS["poly1"][0], OverlaySpec(**SPEC_KW),
+                opts=CompileOptions(max_replicas=1))
+    graph, outs_g = _run("graph")
+    node, outs_n = _run("nodewise")
+    identical = all(np.array_equal(og, on)
+                    for (_, og), (_, on) in zip(outs_g, outs_n))
+    k, p = len(STAGES), graph["partitions"]
+    return dict(
+        spec=SPEC_KW, items=N_ITEMS, requests=N_REQUESTS,
+        stages=[name for name, _ in STAGES],
+        graph=graph, nodewise=node,
+        partition_ratio=round(k / p, 3),
+        charge_ratio=round(node["config_charges"] /
+                           max(graph["config_charges"], 1), 3),
+        makespan_ratio=round(node["makespan_us"] /
+                             max(graph["makespan_us"], 1e-9), 3),
+        identical_results=identical)
+
+
+def check_gate(result: Dict, gate: float) -> List[str]:
+    """Graph replay must (a) cut config charges by >= the partition ratio,
+    (b) never worsen makespan, (c) be numerically identical, and (d) keep
+    re-instantiation warm."""
+    failures = []
+    want = gate * result["partition_ratio"]
+    if result["charge_ratio"] < want:
+        failures.append(
+            f"config charges only cut {result['charge_ratio']}x, below the "
+            f"partition ratio {want}x "
+            f"({result['nodewise']['config_charges']} vs "
+            f"{result['graph']['config_charges']} charges)")
+    if result["makespan_ratio"] < gate:
+        failures.append(
+            f"graph replay makespan ratio {result['makespan_ratio']}x < "
+            f"{gate}x (graph {result['graph']['makespan_us']} vs nodewise "
+            f"{result['nodewise']['makespan_us']} us)")
+    if not result["identical_results"]:
+        failures.append("graph replay and node-at-a-time outputs differ")
+    if result["graph"].get("reinstantiate_misses", 0) != 0:
+        failures.append(
+            f"re-instantiation ran {result['graph']['reinstantiate_misses']}"
+            f" compiler stages (expected a warm cache hit)")
+    return failures
+
+
+def run() -> List[Dict]:
+    """run.py suite entry point."""
+    result = bench()
+    out = []
+    for key in ("graph", "nodewise"):
+        r = result[key]
+        out.append(dict(
+            name=f"graph_replay/{key}",
+            us_per_call=r["makespan_us"],
+            derived=(f"{r['config_charges']} config charges "
+                     f"({r['config_us']}us) over {r['requests']} requests x "
+                     f"{r['stages']} stages, {r['partitions']} partitions")))
+    out.append(dict(
+        name="graph_replay/ratio",
+        us_per_call=0.0,
+        derived=(f"config charges cut {result['charge_ratio']}x "
+                 f"(partition ratio {result['partition_ratio']}x), "
+                 f"makespan {result['makespan_ratio']}x, "
+                 f"identical={result['identical_results']}")))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", type=float, default=None,
+                    help="fail unless charges cut >= GATE x the partition "
+                         "ratio AND makespan ratio >= GATE (1.0 = the "
+                         "ISSUE 5 acceptance bound)")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--update", metavar="PATH", default=None,
+                    help="merge the result into an existing benchmark JSON "
+                         "under the 'graph_replay' key")
+    args = ap.parse_args()
+    result = bench()
+
+    for key in ("graph", "nodewise"):
+        r = result[key]
+        print(f"{key:<9} makespan {r['makespan_us']:>10.1f} us  "
+              f"{r['config_charges']:>3} config charges "
+              f"({r['config_us']:.1f} us)  "
+              f"{r['compile_misses']} cold builds")
+    print(f"partitions: {result['graph']['partitions']} for "
+          f"{result['graph']['stages']} stages "
+          f"(partition ratio {result['partition_ratio']}x)")
+    print(f"config charges cut {result['charge_ratio']}x, "
+          f"makespan {result['makespan_ratio']}x, "
+          f"identical results: {result['identical_results']}")
+
+    failures = check_gate(result, args.gate) if args.gate else []
+    result["gate"] = args.gate
+    result["gate_failures"] = failures
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    if args.update:
+        with open(args.update) as f:
+            doc = json.load(f)
+        doc["graph_replay"] = result
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"updated {args.update} [graph_replay]")
+    if failures:
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

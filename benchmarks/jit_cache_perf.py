@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.cache import JITCache
 from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 from repro.core.runtime import Buffer, Context, Device
 
@@ -48,7 +49,8 @@ def bench_cold_vs_warm() -> float:
 
 def bench_queue_throughput(n_kernels: int = 200) -> None:
     ctx = Context(Device("d", SPEC), cache=JITCache())
-    prog = ctx.build_program(BENCHMARKS["poly1"][0])
+    prog = ctx.build_program(BENCHMARKS["poly1"][0],
+                             opts=CompileOptions())
     x = Buffer(np.linspace(-2, 2, 4096).astype(np.float32))
 
     # same program back to back: one reconfig, then pure exec
@@ -67,8 +69,10 @@ def bench_queue_throughput(n_kernels: int = 200) -> None:
     # fresh context: measuring on the first phase's timeline would fold its
     # span into this phase's makespan and understate the rate
     ctx2 = Context(Device("d2", SPEC), cache=JITCache())
-    pa = ctx2.build_program(BENCHMARKS["poly1"][0], max_replicas=8)
-    pb = ctx2.build_program(BENCHMARKS["chebyshev"][0], max_replicas=8)
+    pa = ctx2.build_program(BENCHMARKS["poly1"][0],
+                            opts=CompileOptions(max_replicas=8))
+    pb = ctx2.build_program(BENCHMARKS["chebyshev"][0],
+                            opts=CompileOptions(max_replicas=8))
     q2 = ctx2.create_queue()
     for i in range(n_kernels):
         p = pa if i % 2 == 0 else pb

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 
 SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
@@ -41,7 +42,8 @@ def _xla_compile_time(ck) -> float:
 def run() -> List[Dict]:
     rows = []
     for name, (src, paper_replicas, _oracle) in sorted(BENCHMARKS.items()):
-        ck = jit_compile(src, SPEC, max_replicas=paper_replicas)
+        ck = jit_compile(src, SPEC,
+                         opts=CompileOptions(max_replicas=paper_replicas))
         xla_ms = _xla_compile_time(ck)
         # the vendor-backend analogue of the paper's Vivado column is the
         # paper's own measured direct-FPGA PAR time (resource_table rows);

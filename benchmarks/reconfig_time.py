@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 from repro.kernels.overlay_exec import ops
 
@@ -24,7 +25,8 @@ SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
 def run() -> List[Dict]:
     rows = []
     names = ["poly1", "poly2", "chebyshev"]
-    cks = {n: jit_compile(BENCHMARKS[n][0], SPEC, max_replicas=1)
+    cks = {n: jit_compile(BENCHMARKS[n][0], SPEC,
+                          opts=CompileOptions(max_replicas=1))
            for n in names}
     pad = max(ck.program.n_instr for ck in cks.values()) + 8
     # unify the register file too: same (instr, regs) signature across all

@@ -7,6 +7,7 @@ from typing import Dict, List
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 from repro.core.place import PlacementError
 
@@ -18,7 +19,8 @@ def run() -> List[Dict]:
         for size in (2, 3, 4, 5, 6, 7, 8):
             spec = OverlaySpec(width=size, height=size, dsp_per_fu=dsp)
             try:
-                ck = jit_compile(src, spec, place_effort=0.3)
+                ck = jit_compile(src, spec,
+                                 opts=CompileOptions(place_effort=0.3))
             except PlacementError:
                 continue
             gops = ck.throughput_gops()

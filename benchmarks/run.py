@@ -10,6 +10,7 @@
   template_build_perf → template-stamp vs joint-anneal cold builds + fill
   persistent_cache_perf → cross-process disk-cache restart simulation
   queue_sched_perf    → makespan-aware vs free-fabric fleet placement
+  graph_replay_perf   → recorded-graph fused replay vs node-at-a-time
 
 Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
 writes the same rows as machine-readable JSON (one object per row with
@@ -23,8 +24,8 @@ import argparse
 import json
 import sys
 
-from benchmarks import (model_step, overlay_exec_perf, par_time,
-                        persistent_cache_perf, queue_sched_perf,
+from benchmarks import (graph_replay_perf, model_step, overlay_exec_perf,
+                        par_time, persistent_cache_perf, queue_sched_perf,
                         reconfig_time, replication_scaling, resource_table,
                         roofline_report, template_build_perf)
 
@@ -39,6 +40,7 @@ SUITES = {
     "template_build_perf": template_build_perf.run,
     "persistent_cache_perf": persistent_cache_perf.run,
     "queue_sched_perf": queue_sched_perf.run,
+    "graph_replay_perf": graph_replay_perf.run,
 }
 
 

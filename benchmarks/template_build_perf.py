@@ -36,6 +36,7 @@ from typing import Dict, List
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.cache import JITCache
 from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 
 SPEC = OverlaySpec(width=32, height=8, dsp_per_fu=2)
@@ -55,12 +56,15 @@ def bench(kernels=KERNELS, replicas=REPLICAS, spec=SPEC) -> List[Dict]:
         cache = JITCache()
         # prime the stage-level template cache at a replica count NOT in the
         # sweep, so every sweep point's full key misses
-        jit_compile(src, spec, max_replicas=3, pr_mode="template",
-                    cache=cache)
+        jit_compile(src, spec, cache=cache,
+                    opts=CompileOptions(max_replicas=3,
+                                        pr_mode="template"))
         for r in replicas:
             gc.collect()   # keep joint-build garbage out of the timed runs
             t0 = time.perf_counter()
-            ck_j = jit_compile(src, spec, max_replicas=r, pr_mode="joint")
+            ck_j = jit_compile(src, spec,
+                               opts=CompileOptions(max_replicas=r,
+                                                   pr_mode="joint"))
             joint_ms = (time.perf_counter() - t0) * 1e3
 
             # cold/stamp runs are short enough that a single GC pause (the
@@ -69,8 +73,9 @@ def bench(kernels=KERNELS, replicas=REPLICAS, spec=SPEC) -> List[Dict]:
             cold_ms = float("inf")
             for _ in range(2):
                 t0 = time.perf_counter()
-                ck_t = jit_compile(src, spec, max_replicas=r,
-                                   pr_mode="template")
+                ck_t = jit_compile(
+                    src, spec, opts=CompileOptions(max_replicas=r,
+                                                   pr_mode="template"))
                 cold_ms = min(cold_ms, (time.perf_counter() - t0) * 1e3)
 
             # vary the free-resource snapshot so each run's FULL key misses
@@ -79,9 +84,10 @@ def bench(kernels=KERNELS, replicas=REPLICAS, spec=SPEC) -> List[Dict]:
             stamp_ms = float("inf")
             for headroom in (0, 1):
                 t0 = time.perf_counter()
-                ck_s = jit_compile(src, spec, max_replicas=r,
-                                   fu_headroom=headroom,
-                                   pr_mode="template", cache=cache)
+                ck_s = jit_compile(
+                    src, spec, fu_headroom=headroom, cache=cache,
+                    opts=CompileOptions(max_replicas=r,
+                                        pr_mode="template"))
                 stamp_ms = min(stamp_ms, (time.perf_counter() - t0) * 1e3)
 
             assert ck_j.plan.replicas == ck_t.plan.replicas == \
@@ -126,7 +132,8 @@ def fill_bench(kernels=KERNELS, spec=FILL_SPEC) -> List[Dict]:
         auto_ms = (time.perf_counter() - t0) * 1e3
         gc.collect()
         t0 = time.perf_counter()
-        ck_j = jit_compile(src, spec, pr_mode="joint")
+        ck_j = jit_compile(src, spec,
+                           opts=CompileOptions(pr_mode="joint"))
         joint_ms = (time.perf_counter() - t0) * 1e3
         never_joint = (ck_a.pr_path == "template" and
                        "joint_probe" not in ck_a.stage_times_ms and

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.cache import JITCache
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 from repro.core.runtime import Buffer, Context, Device, Platform
 
@@ -27,7 +28,7 @@ def main() -> None:
     ctx = Context(dev, cache=cache)
 
     # build + run poly1
-    prog = ctx.build_program(BENCHMARKS["poly1"][0])
+    prog = ctx.build_program(BENCHMARKS["poly1"][0], opts=CompileOptions())
     print(f"built poly1 in {prog.build_ms:.1f} ms "
           f"({prog.compiled.plan.replicas} replicas); "
           f"overlay config {prog.compiled.bitstream.n_bytes} B, "
@@ -45,7 +46,8 @@ def main() -> None:
     # JIT a second kernel at run time — seconds, not hours.  Releasing the
     # first program credits its FUs back so the new build sees a full overlay.
     prog.release()
-    prog2 = ctx.build_program(BENCHMARKS["sgfilter"][0])
+    prog2 = ctx.build_program(BENCHMARKS["sgfilter"][0],
+                              opts=CompileOptions())
     print(f"built sgfilter in {prog2.build_ms:.1f} ms "
           f"({prog2.compiled.plan.replicas} replicas)")
     y = np.linspace(-1, 1, 1000).astype(np.float32)
@@ -59,7 +61,7 @@ def main() -> None:
 
     # rebuild poly1: the JIT cache returns the artifact without recompiling
     prog2.release()
-    prog3 = ctx.build_program(BENCHMARKS["poly1"][0])
+    prog3 = ctx.build_program(BENCHMARKS["poly1"][0], opts=CompileOptions())
     print(f"rebuilt poly1 in {prog3.build_ms:.3f} ms (cache: "
           f"{cache.stats.as_dict()})")
 

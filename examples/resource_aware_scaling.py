@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.overlay import OverlaySpec
+from repro.core.options import CompileOptions
 from repro.core.runtime import Buffer, Context, Device
 
 SRC = BENCHMARKS["chebyshev"][0]
@@ -25,7 +26,7 @@ def main() -> None:
         ctx = Context(Device(f"ovl{size}", OverlaySpec(width=size,
                                                        height=size)))
         try:
-            prog = ctx.build_program(SRC)
+            prog = ctx.build_program(SRC, opts=CompileOptions())
         except Exception as e:  # noqa: BLE001
             print(f"  {size}x{size} |      0 FUs  |  (kernel does not fit: "
                   f"{type(e).__name__})")
@@ -42,7 +43,7 @@ def main() -> None:
         if reserve:
             ctx.reserve(fus=reserve)
         try:
-            prog = ctx.build_program(SRC)
+            prog = ctx.build_program(SRC, opts=CompileOptions())
         except Exception:
             print(f"  8x8   |   {reserve:3d} FUs   |   none (does not fit)")
             continue

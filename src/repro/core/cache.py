@@ -156,6 +156,23 @@ def make_cache_key(kernel: Union[str, Callable, DFG],
     return f"{kf}@{hashlib.sha256(ctx.encode()).hexdigest()[:16]}"
 
 
+def make_graph_key(graph_fingerprint: str, spec: OverlaySpec,
+                   max_partition_fus: Optional[int] = None) -> CacheKey:
+    """Key for a recorded graph's *partition plan* (how the Session cut the
+    DAG into fused overlay configurations).
+
+    Partitioning depends only on the graph's content, the overlay geometry
+    and the partition-FU budget — NOT on the free-resource snapshot (replica
+    budget is decided per partition at build time, like any other compile).
+    The fused artifacts themselves are keyed per partition through the
+    ordinary :func:`make_cache_key` path (content hash of the fused DFG +
+    opts), which is what makes re-instantiation warm across restarts via
+    the disk tier."""
+    cap = "-" if max_partition_fus is None else str(max_partition_fus)
+    return (f"graph:{graph_fingerprint}@{spec_fingerprint(spec)[:16]}:"
+            f"p{cap}")
+
+
 def make_template_key(g: DFG, spec: OverlaySpec, seed: int = 0,
                       place_effort: float = 1.0) -> CacheKey:
     """Stage-level key for P&R templates (:mod:`repro.core.template`).

@@ -70,7 +70,7 @@ from repro.core.replicate import ReplicationPlan, plan_replication, \
 from repro.core.route import RoutingResult, route
 
 __all__ = ["CompiledKernel", "CompileOptions", "DEFAULT_MIN_TEMPLATE_FILL",
-           "jit_compile", "lower_to_dfg", "overlay_jit"]
+           "jit_compile", "lower_cached", "lower_to_dfg", "overlay_jit"]
 
 
 @dataclasses.dataclass
@@ -158,6 +158,28 @@ def lower_to_dfg(kernel: Union[str, Callable, DFG],
     return optimize(_lower_consts(trace(kernel, n_inputs, name)))
 
 
+def lower_cached(kernel: Union[str, Callable, DFG],
+                 n_inputs: Optional[int] = None,
+                 name: Optional[str] = None,
+                 cache: Optional["JITCache"] = None) -> DFG:
+    """:func:`lower_to_dfg` through a cache's frontend tier.
+
+    OpenCL text keys on the raw source hash (computable without parsing),
+    so a warm process skips even parse+optimize.  This is THE lowering
+    entry point shared by ``jit_compile``, graph capture and the default
+    :class:`~repro.core.graph.KernelGraph` lowerer — one definition of the
+    cached normal form."""
+    if cache is not None and isinstance(kernel, str):
+        from repro.core.cache import kernel_fingerprint
+        fkey = kernel_fingerprint(kernel)
+        g = cache.get_frontend(fkey)
+        if g is None:
+            g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+            cache.put_frontend(fkey, g)
+        return g
+    return lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+
+
 def jit_compile(kernel: Union[str, Callable, DFG],
                 spec: OverlaySpec,
                 n_inputs: Optional[int] = None,
@@ -177,8 +199,12 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     The canonical way to tune the build is one frozen
     :class:`~repro.core.options.CompileOptions` value (``opts``) — the same
     object the Session API and the cache key consume.  The loose keyword
-    knobs are the legacy shim: when ``opts`` is None they are folded into
-    one (and validated there); when ``opts`` is given they are ignored.
+    knobs are the **deprecated** legacy shim: when ``opts`` is None they
+    are folded into one (and validated there) under a DeprecationWarning
+    if any build knob is actually set; when ``opts`` is given they are
+    ignored.  (``n_inputs``/``name`` alone stay silent — they describe the
+    kernel, not the build, and remain the convenient way to trace a python
+    callable.)
 
     With ``cache``, the build is keyed on a content hash of (kernel, spec,
     effective replica cap implied by the free-resource snapshot,
@@ -190,6 +216,16 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     the joint annealer.
     """
     if opts is None:
+        if (max_replicas is not None or seed != 0 or place_effort != 1.0
+                or pr_mode != "auto"
+                or min_template_fill != DEFAULT_MIN_TEMPLATE_FILL):
+            import warnings
+            warnings.warn(
+                "jit_compile with raw build knobs (max_replicas/seed/"
+                "place_effort/pr_mode/min_template_fill) is deprecated; "
+                "pass opts=CompileOptions(...) — see the ROADMAP "
+                "'Runtime v2' migration table",
+                DeprecationWarning, stacklevel=2)
         # CompileOptions.__post_init__ validates pr_mode / fill range
         opts = CompileOptions(n_inputs=n_inputs, name=name,
                               max_replicas=max_replicas, seed=seed,
@@ -205,15 +241,7 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     # source hash, computable without parsing), so a warm process skips
     # even the parse+optimize pipeline
     t0 = time.perf_counter()
-    if cache is not None and isinstance(kernel, str):
-        from repro.core.cache import kernel_fingerprint
-        fkey = kernel_fingerprint(kernel)
-        g = cache.get_frontend(fkey)
-        if g is None:
-            g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
-            cache.put_frontend(fkey, g)
-    else:
-        g = lower_to_dfg(kernel, n_inputs, name, parse_source=True)
+    g = lower_cached(kernel, n_inputs, name, cache=cache)
     times["frontend"] = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()

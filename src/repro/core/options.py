@@ -49,6 +49,12 @@ class CompileOptions:
     place_effort: float = 1.0            # annealer effort multiplier
     pr_mode: str = "auto"                # auto | template | joint
     min_template_fill: float = DEFAULT_MIN_TEMPLATE_FILL
+    # graph-instantiation knob: cap on the FUs a fused partition may pack
+    # (None = whatever fits the roomiest device with one replica).  Like
+    # max_replicas it never changes a single compiled artifact — only how a
+    # recorded KernelGraph is cut into partitions — so it is excluded from
+    # key_tail(); a different cut reaches the cache as a different fused DFG
+    max_partition_fus: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.pr_mode not in _PR_MODES:
@@ -57,6 +63,9 @@ class CompileOptions:
         if not 0.0 < self.min_template_fill <= 1.0:
             raise ValueError(f"min_template_fill must be in (0, 1], "
                              f"got {self.min_template_fill!r}")
+        if self.max_partition_fus is not None and self.max_partition_fus < 1:
+            raise ValueError(f"max_partition_fus must be >= 1, "
+                             f"got {self.max_partition_fus!r}")
 
     # ---------------------------------------------------------------- keying
     def key_tail(self) -> str:
@@ -65,9 +74,12 @@ class CompileOptions:
         ``max_replicas`` is absent on purpose: the cache key normalizes the
         free-resource snapshot *and* the cap through the replication plan
         they jointly imply (see :func:`repro.core.cache.make_cache_key`), so
-        the plan — not the raw cap — is what gets hashed.  The format
-        matches the pre-Session ad-hoc tuple byte for byte, so existing
-        disk-cache tiers stay warm across the API migration."""
+        the plan — not the raw cap — is what gets hashed.
+        ``max_partition_fus`` is absent too: it only steers how a recorded
+        graph is partitioned, and a different partitioning reaches the cache
+        as a different fused-DFG fingerprint.  The format matches the
+        pre-Session ad-hoc tuple byte for byte, so existing disk-cache
+        tiers stay warm across the API migration."""
         return (f"{self.seed}:{self.place_effort:g}:{self.pr_mode}:"
                 f"{self.min_template_fill:g}")
 
@@ -75,3 +87,14 @@ class CompileOptions:
         """A copy with ``changes`` applied (frozen dataclasses can't mutate;
         the scheduler uses this to re-target ``max_replicas`` on resize)."""
         return dataclasses.replace(self, **changes)
+
+    # ---------------------------------------------------------------- fusion
+    def fuse_compatible(self, other: "CompileOptions") -> bool:
+        """Whether two recorded graph calls may share one fused partition.
+
+        Kernel descriptors (``n_inputs``/``name``) and the partition-level
+        caps (``max_replicas`` — min-merged across the partition — and
+        ``max_partition_fus``) never block fusion; every knob that changes
+        the compiled artifact (exactly :meth:`key_tail`) must agree, or the
+        two nodes need separate configurations anyway."""
+        return self.key_tail() == other.key_tail()

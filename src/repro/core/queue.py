@@ -144,9 +144,12 @@ class CommandQueue:
 
     # ------------------------------------------------------------- enqueue
     def enqueue_kernel(self, kernel: "Kernel",
-                       wait_for: Sequence[Event] = ()) -> Event:
+                       wait_for: Sequence[Event] = (),
+                       label: Optional[str] = None) -> Event:
         """Submit a kernel; returns its Event (already functionally complete,
-        with modelled timestamps)."""
+        with modelled timestamps).  ``label`` overrides the event's kernel
+        name — graph replay tags each fused partition launch with its
+        partition identity so profiles stay readable."""
         from repro.core.runtime import RuntimeError_
         if kernel.program.released:
             # reject before booking engine time: the program's fabric may
@@ -202,7 +205,8 @@ class CommandQueue:
             bisect.insort(self.ctx._engine_busy, (t_submit, t_submit + dur))
             self.ctx._engine_end = max(self.ctx._engine_end, t_submit + dur)
 
-        ev = Event(kernel_name=ck.name, t_queued_us=t_queued,
+        ev = Event(kernel_name=label if label is not None else ck.name,
+                   t_queued_us=t_queued,
                    t_submit_us=t_submit, config_us=config_us,
                    t_start_us=t_submit + config_us,
                    t_end_us=t_submit + dur,
@@ -269,6 +273,19 @@ class CommandQueue:
     @property
     def makespan_us(self) -> float:
         return self.finish()
+
+    # ---------------------------------------------- config-charge accounting
+    @property
+    def config_charges(self) -> int:
+        """Reconfigurations this queue's retained commands paid for — THE
+        quantity graph replay amortizes (once per partition instead of once
+        per node; ``benchmarks/graph_replay_perf.py`` gates on it)."""
+        return sum(1 for e in self.events if e.config_us > 0.0)
+
+    @property
+    def config_us_total(self) -> float:
+        """Total modelled µs this queue's commands spent loading bitstreams."""
+        return sum(e.config_us for e in self.events)
 
     def throughput_kernels_per_sec(self) -> float:
         n = sum(1 for e in self.events if e.kernel_name != "barrier")

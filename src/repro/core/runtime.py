@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -188,11 +189,18 @@ class Context:
         plan's FU/IO usage (credited back by :meth:`Program.release`).
 
         ``opts`` is the canonical way to tune the build; the loose keywords
-        are a legacy shim folded into a CompileOptions when it is absent.
+        are a **deprecated** legacy shim folded into a CompileOptions when
+        it is absent (the Session core always passes ``opts``).
         Compile + debit happen under the context lock, so the headroom a
         build plans against cannot be invalidated mid-pipeline by a
         concurrent build or release on the same device."""
         if opts is None:
+            warnings.warn(
+                "Context.build_program(source, n_inputs=..., ...) with "
+                "loose keywords is deprecated; use Session.build(source, "
+                "CompileOptions(n_inputs=...), tenant=...) — see the "
+                "ROADMAP 'Runtime v2' migration table",
+                DeprecationWarning, stacklevel=2)
             opts = CompileOptions(n_inputs=n_inputs, name=name,
                                   max_replicas=max_replicas)
         with self.lock:
@@ -432,6 +440,16 @@ class Scheduler:
         with self._lock:
             self.priorities[tenant] = priority
 
+    def partition_spec(self) -> OverlaySpec:
+        """The overlay geometry graph partitioning plans against: the
+        roomiest device's spec (by FU count, then IO).  A partition must fit
+        SOME device with at least one replica; which device actually hosts
+        it — and at how many replicas — is decided per partition at build
+        time by the ordinary placement/replication path."""
+        ctx = max(self.contexts.values(),
+                  key=lambda c: (c.device.spec.n_fus, c.device.spec.n_io))
+        return ctx.device.spec
+
     # -------------------------------------------------------------- ranking
     def _ranked(self, exclude: Optional[Tuple[Context, float]] = None
                 ) -> List[Context]:
@@ -492,9 +510,17 @@ class Scheduler:
               name: Optional[str] = None,
               max_replicas: Optional[int] = None,
               max_shed_rounds: int = 8) -> Program:
-        """Legacy entry point — a thin shim folding the loose knobs into a
-        :class:`CompileOptions` and delegating to :meth:`build_opts` (the
-        Session core), so both paths exercise one implementation."""
+        """**Deprecated** legacy entry point — a thin shim folding the loose
+        knobs into a :class:`CompileOptions` and delegating to
+        :meth:`build_opts` (the Session core), so both paths exercise one
+        implementation.  New code wants
+        ``Session.compile(source, CompileOptions(...)).result()``."""
+        warnings.warn(
+            "Scheduler.build(source, max_replicas=...) is deprecated; use "
+            "Session.compile(source, CompileOptions(max_replicas=...))"
+            ".result() or Scheduler.build_opts — see the ROADMAP "
+            "'Runtime v2' migration table",
+            DeprecationWarning, stacklevel=2)
         return self.build_opts(
             source, CompileOptions(n_inputs=n_inputs, name=name,
                                    max_replicas=max_replicas),

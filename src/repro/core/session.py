@@ -22,6 +22,15 @@ one fleet-wide :class:`JITCache` (with optional disk tier), and per-tenant
     Fig. 5 implies, and a warm-cache compile (sub-millisecond) costs the
     timeline nothing.
 
+For the dominant serving pattern — many small kernels from one tenant,
+where per-kernel enqueue pays a configuration charge on every switch — the
+Session also speaks recorded graphs (:mod:`repro.core.graph`):
+:meth:`Session.capture` records calls into a DAG without compiling,
+:meth:`Session.instantiate` partitions the DAG and compiles each partition
+as ONE fused kernel (futures-based, through the same single-flight/cached
+pipeline), and :meth:`Session.launch` replays the graph paying the config
+charge once per partition instead of once per node.
+
 Timestamps: the Session pins µs-time zero at construction; compile events
 are stamped with real wall-clock build completion relative to that epoch,
 which is what makes compile latency and the modelled device timeline share
@@ -46,7 +55,9 @@ import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple, Union
 
-from repro.core.cache import JITCache, kernel_fingerprint
+from repro.core.cache import JITCache, kernel_fingerprint, make_graph_key
+from repro.core.graph import (GraphError, KernelGraph, Partition,
+                              partition_graph)
 from repro.core.options import CompileOptions
 from repro.core.queue import CommandQueue, Event, user_event
 from repro.core.runtime import (Buffer, Context, Device, Platform,  # noqa: F401 — Device re-exported for Session users
@@ -55,6 +66,12 @@ from repro.core.runtime import (Buffer, Context, Device, Platform,  # noqa: F401
 
 class SessionError(RuntimeError):
     pass
+
+
+def _release_result(fut: "KernelFuture") -> None:
+    """Done-callback: release a superseded build's Program (idempotent)."""
+    if fut.exception() is None:
+        fut.result().release()
 
 
 class KernelFuture:
@@ -111,6 +128,99 @@ class KernelFuture:
         return self._record["t_done_us"] - self._record["t_submit_us"]
 
 
+class GraphExec:
+    """An instantiated :class:`~repro.core.graph.KernelGraph`: one compiled
+    (or compiling — instantiation is futures-based) fused kernel per
+    partition, plus the wiring replay needs.
+
+    ``session.launch(gexec, *inputs)`` replays the whole recorded DAG with
+    ONE configuration charge per partition; re-launching reuses the same
+    resident programs, so steady-state serving of the pipeline pays no
+    further compiles and — when the graph fused to a single partition — no
+    further reconfigurations at all.  Release the fabric with
+    :meth:`release` (GraphExec is a context manager).
+    """
+
+    def __init__(self, session: "Session", graph: KernelGraph,
+                 partitions: Sequence[Partition],
+                 futures: Sequence[KernelFuture], tenant: Optional[str]):
+        self.session = session
+        self.graph = graph
+        self.partitions = list(partitions)
+        self.futures = list(futures)
+        self.tenant = tenant
+        owner = {nid: p.index for p in self.partitions for nid in p.node_ids}
+        # per partition: fused-kernel args as ("in", graph_input_idx) or
+        # ("step", partition_idx, output_pos) — resolved against real
+        # buffers at launch
+        self._steps = []
+        for p in self.partitions:
+            args = []
+            for ref in p.ext:
+                if ref[0] == "in":
+                    args.append(("in", ref[1]))
+                else:
+                    src = self.partitions[owner[ref[1]]]
+                    args.append(("step", src.index,
+                                 src.out_pos(ref[1], ref[2])))
+            label = f"graph:{graph.name}/p{p.index}[{p.dfg.name}]"
+            self._steps.append((self.futures[p.index], args, p.deps, label))
+        self._outs = []
+        for b in graph.outputs:
+            src = self.partitions[owner[b.nid]]
+            self._outs.append((src.index, src.out_pos(b.nid, b.out_idx)))
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def n_partitions(self) -> int:
+        """Upper bound on configuration charges per replay — the quantity
+        the graph API amortizes (k nodes → n_partitions ≤ k configs)."""
+        return len(self.partitions)
+
+    def done(self) -> bool:
+        return all(f.done() for f in self.futures)
+
+    def result(self, timeout: Optional[float] = None) -> "GraphExec":
+        """Block until every partition's build landed (errors surface
+        here, exactly like ``KernelFuture.result``).  ``timeout`` bounds
+        the WHOLE wait, not each partition."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for f in self.futures:
+            f.result(None if deadline is None
+                     else max(0.0, deadline - time.monotonic()))
+        return self
+
+    @property
+    def programs(self):
+        return [f.result() for f in self.futures]
+
+    def release(self) -> None:
+        """Release every partition's fabric (idempotent; identical
+        partitions that single-flighted into one Program release once).
+        Partitions whose build FAILED hold no fabric and are skipped — a
+        partial instantiation must still release what did land, not leak
+        it behind the first build error."""
+        seen = set()
+        for f in self.futures:
+            try:
+                prog = f.result()
+            except Exception:
+                continue
+            if id(prog) not in seen:
+                seen.add(id(prog))
+                prog.release()
+
+    def __enter__(self) -> "GraphExec":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return (f"GraphExec({self.graph.name}: {len(self.graph.nodes)} "
+                f"nodes -> {self.n_partitions} partitions)")
+
+
 class Session:
     """The single facade a serving host talks to (see module docstring).
 
@@ -143,6 +253,18 @@ class Session:
         # compiles are the JITCache's job, not this map's
         self._inflight: Dict[Tuple, Tuple] = {}
         self._queues: Dict[Tuple[str, str], CommandQueue] = {}
+        # graph-plan memo: make_graph_key -> List[Partition].  Partitioning
+        # is pure in (graph content, spec, budget), so repeat instantiations
+        # of one pipeline skip the cut; the fused ARTIFACTS warm through the
+        # ordinary JITCache (single-flight + disk tier)
+        self._graph_plans: Dict[str, list] = {}
+        # nodewise-replay memo: (graph fingerprint, tenant) -> node futures.
+        # Without it every repeat replay would re-key each node against a
+        # snapshot its own resident predecessors shrank, building (and
+        # leaking) a fresh Program per request — a real pre-graph server
+        # holds its Program handles across requests, so the baseline must
+        self._nodewise_futs: Dict[Tuple, list] = {}
+        self._graph_count = 0
         self._t0 = time.perf_counter()
         self._closed = False
 
@@ -251,14 +373,16 @@ class Session:
 
     def enqueue(self, handle: Union[KernelFuture, Program], *args,
                 wait_for: Sequence[Event] = (),
-                tenant: Optional[str] = None) -> Event:
+                tenant: Optional[str] = None,
+                label: Optional[str] = None) -> Event:
         """Run a kernel on its program's device queue.
 
         With a :class:`KernelFuture` handle, execution is chained onto the
         build: the kernel's event depends on the compile event, so it
         cannot submit (nor backfill) before the modelled compile-finish
         time — compile latency is on the serving timeline.  ``args`` are
-        Buffers or arrays (arrays are wrapped)."""
+        Buffers or arrays (arrays are wrapped); ``label`` overrides the
+        event's kernel name (graph replay tags partition launches)."""
         deps = tuple(wait_for)
         if isinstance(handle, KernelFuture):
             prog = handle.result()     # the host needs the artifact to run
@@ -270,7 +394,165 @@ class Session:
         bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in args]
         q = self.queue_for(tenant, prog.ctx.device.name)
         return q.enqueue_kernel(prog.create_kernel().set_args(*bufs),
-                                wait_for=deps)
+                                wait_for=deps, label=label)
+
+    # ------------------------------------------------- graph capture/replay
+    def capture(self, tenant: Optional[str] = None,
+                name: Optional[str] = None) -> KernelGraph:
+        """Open a recording context (OpenCL command-buffer / CUDA-Graph
+        style): inside ``with session.capture(tenant) as g:`` every
+        ``g.call(source, opts, *buffers)`` RECORDS a kernel call — no
+        compile, no enqueue — and buffer flow between calls defines a DAG.
+        Leaving the block freezes + validates the graph; hand it to
+        :meth:`instantiate`.  Source lowering at record time rides the
+        cache's frontend tier, so re-capturing a known pipeline re-parses
+        nothing."""
+        from repro.core.jit import lower_cached
+
+        def lower(source, opts: CompileOptions, n_args: int):
+            n = opts.n_inputs if opts.n_inputs is not None else n_args
+            return lower_cached(source, n, opts.name, cache=self.cache)
+
+        with self._lock:
+            self._graph_count += 1
+            gname = name or f"graph{self._graph_count}"
+        return KernelGraph(gname, tenant=tenant, lower=lower)
+
+    def instantiate(self, graph: KernelGraph, tenant: Optional[str] = None,
+                    max_partition_fus: Optional[int] = None) -> GraphExec:
+        """Compile a recorded graph into packed overlay configurations.
+
+        The DAG is cut into partitions (dependency-adjacent nodes fused
+        under the FU/IO budget of the fleet's roomiest device —
+        :func:`repro.core.graph.partition_graph`), and each partition's
+        fused DFG is submitted through the normal :meth:`compile` path:
+        futures-based, single-flight deduplicated, and keyed on a content
+        hash of the fused DFG + opts — so a repeat instantiation (same
+        process or after a restart, via the disk tier) runs no compiler
+        stage.  Returns immediately; builds land on the worker pool."""
+        graph.freeze()                    # no-op when capture already froze
+        if max_partition_fus is not None and max_partition_fus < 1:
+            raise ValueError(f"max_partition_fus must be >= 1, "
+                             f"got {max_partition_fus!r}")
+        spec = self.scheduler.partition_spec()
+        if max_partition_fus is None:
+            caps = [n.opts.max_partition_fus for n in graph.nodes
+                    if n.opts.max_partition_fus is not None]
+            max_partition_fus = min(caps) if caps else None
+        key = make_graph_key(graph.fingerprint(), spec, max_partition_fus)
+        with self._lock:
+            partitions = self._graph_plans.get(key)
+        if partitions is None:
+            partitions = partition_graph(
+                graph, spec, max_partition_fus=max_partition_fus)
+            with self._lock:
+                self._graph_plans.setdefault(key, partitions)
+        tenant = tenant if tenant is not None else graph.tenant
+        futures = [self.compile(p.dfg, p.opts, tenant=tenant)
+                   for p in partitions]
+        return GraphExec(self, graph, partitions, futures, tenant)
+
+    def launch(self, gexec: GraphExec, *inputs,
+               tenant: Optional[str] = None) -> Event:
+        """Replay an instantiated graph over real input arrays.
+
+        One fused kernel is enqueued per partition — the configuration
+        charge is paid per PARTITION, not per recorded node — with
+        cross-partition dependencies expressed as ordinary ``wait_for``
+        event edges on the per-tenant out-of-order queues (each partition
+        execution also chains on its own compile event, Fig. 5 style).
+        Returns one aggregate Event: ``wait()`` yields the graph outputs,
+        timestamps span the whole replay."""
+        tenant = tenant if tenant is not None else gexec.tenant
+        return self._replay(gexec.graph, gexec._steps, gexec._outs, inputs,
+                            tenant, f"graph:{gexec.graph.name}")
+
+    def launch_nodewise(self, graph: KernelGraph, *inputs,
+                        tenant: Optional[str] = None) -> Event:
+        """Replay a recorded graph the PRE-graph way: every node compiled
+        (cache-deduplicated) and enqueued individually, paying a config
+        charge per node whenever configurations alternate.  This is the
+        baseline `instantiate`/:meth:`launch` amortizes — kept as API so
+        serving code and ``benchmarks/graph_replay_perf.py`` can measure
+        both sides of the trade on identical traces."""
+        graph.freeze()
+        tenant = tenant if tenant is not None else graph.tenant
+        futs = self._node_futures(graph, tenant)
+        # recording order IS topological (a call can only consume buffers
+        # that already exist), so step index == position in graph.nodes
+        pos = {node.nid: i for i, node in enumerate(graph.nodes)}
+        steps = []
+        for node, fut in zip(graph.nodes, futs):
+            args = [b.ref() if b.kind == "in" else
+                    ("step", pos[b.nid], b.out_idx) for b in node.args]
+            deps = sorted(pos[d] for d in graph.node_deps(node))
+            steps.append((fut, args, deps,
+                          f"graph:{graph.name}/N{node.nid}[{node.dfg.name}]"))
+        outs = [(pos[b.nid], b.out_idx) for b in graph.outputs]
+        return self._replay(graph, steps, outs, inputs, tenant,
+                            f"graph:{graph.name}:nodewise")
+
+    def _node_futures(self, graph: KernelGraph, tenant: Optional[str]):
+        """Per-node compile futures for nodewise replay, memoized per
+        (graph content, tenant) so repeat replays reuse the SAME resident
+        Programs — a server holds its Program handles across requests, and
+        re-keying each node against a snapshot its own resident
+        predecessors shrank would build a fresh Program per request.
+
+        Lookup, staleness check and store are one atomic step under the
+        session lock (compile() only *submits* under it, no pipeline stage
+        runs), so two tenant threads replaying the same graph cannot both
+        build and orphan a loser's resident Programs.  A stale entry (a
+        build failed, or shedding released a node's Program) is rebuilt
+        whole, and whatever remains resident of the old generation is
+        released — not silently leaked off the ledger."""
+        key = (graph.fingerprint(), tenant)
+        with self._lock:
+            futs = self._nodewise_futs.get(key)
+            # pending builds are fresh by definition; only a *landed* build
+            # can have failed or had its Program released (non-blocking)
+            if futs is not None and not any(
+                    f.done() and (f.exception() is not None
+                                  or f.result().released)
+                    for f in futs):
+                return futs
+            stale = futs
+            futs = [self.compile(node.dfg, node.opts, tenant=tenant)
+                    for node in graph.nodes]
+            self._nodewise_futs[key] = futs
+        if stale is not None:
+            # a stale build still in flight is JOINED by its replacement
+            # (single-flight: same key, same underlying future, same
+            # Program) — releasing it would release the new generation's
+            # Program too, so only genuinely superseded builds are dropped
+            kept = {id(f._fut) for f in futs}
+            for f in stale:
+                if id(f._fut) not in kept:
+                    f.add_done_callback(_release_result)
+        return futs
+
+    def _replay(self, graph: KernelGraph, steps, outs, inputs,
+                tenant: Optional[str], name: str) -> Event:
+        if len(inputs) != len(graph.inputs):
+            raise GraphError(
+                f"{graph.name}: expected {len(graph.inputs)} inputs, "
+                f"got {len(inputs)}")
+        bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in inputs]
+        events = []
+        for fut, args, deps, label in steps:
+            argv = [bufs[r[1]] if r[0] == "in" else
+                    events[r[1]].outputs[r[2]] for r in args]
+            # enqueue() chains the step on its own compile event and routes
+            # it to the (tenant, device) queue — replay adds only the
+            # cross-step event edges
+            events.append(self.enqueue(
+                fut, *argv, wait_for=tuple(events[d] for d in deps),
+                tenant=tenant, label=label))
+        outputs = tuple(events[si].outputs[pos] for si, pos in outs)
+        t_end = max(e.t_end_us for e in events)
+        return Event(kernel_name=name, t_queued_us=0.0, t_submit_us=t_end,
+                     t_start_us=t_end, t_end_us=t_end, status="complete",
+                     outputs=outputs, deps=tuple(events))
 
     # ---------------------------------------------------------- inspection
     def finish(self) -> float:
@@ -294,12 +576,22 @@ class Session:
     def makespan_report(self):
         return self.scheduler.makespan_report()
 
+    def config_charges(self) -> dict:
+        """Reconfiguration accounting across every tenant queue — the
+        serving cost graph replay amortizes."""
+        with self._lock:
+            queues = list(self._queues.values())
+        return dict(charges=sum(q.config_charges for q in queues),
+                    config_us=sum(q.config_us_total for q in queues))
+
     def stats(self) -> dict:
         """One serving dashboard blob: cache tiers + per-device makespan."""
         return dict(cache=self.cache.stats.as_dict(),
                     devices=self.makespan_report(),
                     inflight=len(self._inflight),
-                    queues=len(self._queues))
+                    queues=len(self._queues),
+                    graph_plans=len(self._graph_plans),
+                    config=self.config_charges())
 
     # ------------------------------------------------------------ lifecycle
     def close(self, wait: bool = True) -> None:

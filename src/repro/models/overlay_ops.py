@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.jit import CompiledKernel, jit_compile
+from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 
 _SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
@@ -29,8 +30,10 @@ _CACHE: Dict[str, CompiledKernel] = {}
 
 def _get(name: str, fn: Callable, n_inputs: int) -> CompiledKernel:
     if name not in _CACHE:
-        _CACHE[name] = jit_compile(fn, _SPEC, n_inputs=n_inputs, name=name,
-                                   max_replicas=1, place_effort=0.25)
+        _CACHE[name] = jit_compile(
+            fn, _SPEC, opts=CompileOptions(n_inputs=n_inputs, name=name,
+                                           max_replicas=1,
+                                           place_effort=0.25))
     return _CACHE[name]
 
 

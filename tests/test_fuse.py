@@ -1,0 +1,201 @@
+"""Direct coverage for :mod:`repro.core.fuse` (ISSUE 5 satellite).
+
+The muladd/clustering half was previously exercised only through the JIT
+pipeline; the n-ary ``fuse_dfgs`` half is the graph-replay tentpole's
+engine.  Both are gated here on the only property that matters: a fused
+DFG is *numerically identical* to running its constituent kernels
+back-to-back.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dfg import trace
+from repro.core.fuse import (FusionError, fuse_dfgs, fuse_muladd,
+                             to_fu_graph)
+from repro.core.jit import lower_to_dfg
+
+X = np.linspace(-2.0, 2.0, 257).astype(np.float32)
+Y = np.linspace(1.5, -1.5, 257).astype(np.float32)
+
+
+def _dfg(fn, n, name):
+    return lower_to_dfg(fn, n, name)
+
+
+# ------------------------------------------------------------- fuse_muladd
+
+def test_fuse_muladd_collapses_chain_and_preserves_value():
+    g = trace(lambda x, y: x * y + 3.0, 2, "ma")
+    fused = fuse_muladd(g)
+    ops = [n.op for n in fused.op_nodes()]
+    assert "mul" not in ops          # absorbed into the DSP post-adder form
+    np.testing.assert_array_equal(
+        fused.evaluate([X, Y])[0], g.evaluate([X, Y])[0])
+
+
+def test_fuse_muladd_keeps_multi_use_mul():
+    # the mul feeds two users: collapsing it would duplicate the DSP work
+    g = trace(lambda x, y: (x * y) + (x * y) * 2.0, 2, "shared")
+    fused = fuse_muladd(g)
+    np.testing.assert_array_equal(
+        fused.evaluate([X, Y])[0], g.evaluate([X, Y])[0])
+
+
+def test_fuse_muladd_respects_sub_operand_order():
+    # c - a*b is NOT a DSP post-adder form; a*b - c is
+    keep = trace(lambda x, y: x - (x * y), 2, "keep")
+    assert "mul" in [n.op for n in fuse_muladd(keep).op_nodes()]
+    fold = trace(lambda x, y: (x * y) - x, 2, "fold")
+    assert "mul" not in [n.op for n in fuse_muladd(fold).op_nodes()]
+    for g in (keep, fold):
+        np.testing.assert_array_equal(
+            fuse_muladd(g).evaluate([X, Y])[0], g.evaluate([X, Y])[0])
+
+
+# --------------------------------------------------------------- fuse_dfgs
+
+def test_fused_pair_equals_sequential_execution():
+    a = _dfg(lambda x: x * 2.0 + 1.0, 1, "a")
+    b = _dfg(lambda x: x * x - 3.0, 1, "b")
+    fused, ext = fuse_dfgs(
+        [(a, [("ext", "x")]), (b, [("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="a>b")
+    assert ext == ["x"]
+    # intermediate buffer elided: one input, one output
+    assert len(fused.inputs) == 1 and len(fused.outputs) == 1
+    seq = b.evaluate([a.evaluate([X])[0]])[0]
+    np.testing.assert_array_equal(fused.evaluate([X])[0], seq)
+
+
+def test_fusion_elides_io_but_keeps_observed_outputs():
+    a = _dfg(lambda x, y: x * y + 2.0, 2, "a")
+    b = _dfg(lambda t: t * t, 1, "b")
+    # keep BOTH a's and b's outputs: a's is observed by the caller
+    fused, ext = fuse_dfgs(
+        [(a, [("ext", 0), ("ext", 1)]), (b, [("int", 0, 0)])],
+        keep_outputs=[(0, 0), (1, 0)], name="tee")
+    assert ext == [0, 1]
+    mid = a.evaluate([X, Y])[0]
+    out_a, out_b = fused.evaluate([X, Y])
+    np.testing.assert_array_equal(out_a, mid)
+    np.testing.assert_array_equal(out_b, b.evaluate([mid])[0])
+    # now drop a's output: the intermediate costs no IO at all
+    lean, _ = fuse_dfgs(
+        [(a, [("ext", 0), ("ext", 1)]), (b, [("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="lean")
+    assert len(lean.outputs) == 1
+    assert to_fu_graph(lean).n_io < to_fu_graph(fused).n_io
+
+
+def test_shared_external_input_dedups_to_one_fused_input():
+    a = _dfg(lambda x: x + 1.0, 1, "a")
+    b = _dfg(lambda x, t: x * t, 2, "b")     # reads the SAME external x
+    fused, ext = fuse_dfgs(
+        [(a, [("ext", "x")]), (b, [("ext", "x"), ("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="diamond")
+    assert ext == ["x"]                       # aliased reads share one pad
+    np.testing.assert_array_equal(
+        fused.evaluate([X])[0], X * (X + np.float32(1.0)))
+
+
+def test_cross_kernel_cse_shrinks_fused_graph():
+    # both kernels compute x*x: fusion + optimize may share it
+    a = _dfg(lambda x: x * x + 1.0, 1, "a")
+    b = _dfg(lambda x, t: x * x + t, 2, "b")
+    fused, _ = fuse_dfgs(
+        [(a, [("ext", "x")]), (b, [("ext", "x"), ("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="cse")
+    raw, _ = fuse_dfgs(
+        [(a, [("ext", "x")]), (b, [("ext", "x"), ("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="raw", run_optimize=False)
+    assert fused.n_ops < raw.n_ops
+    np.testing.assert_array_equal(
+        fused.evaluate([X])[0], raw.evaluate([X])[0])
+
+
+def test_fuse_dfgs_rejects_bad_wiring():
+    a = _dfg(lambda x: x + 1.0, 1, "a")
+    b = _dfg(lambda x: x * 2.0, 1, "b")
+    with pytest.raises(FusionError):          # arity mismatch
+        fuse_dfgs([(a, [])], keep_outputs=[(0, 0)])
+    with pytest.raises(FusionError):          # forward (cyclic) reference
+        fuse_dfgs([(a, [("int", 1, 0)]), (b, [("int", 0, 0)])],
+                  keep_outputs=[(1, 0)])
+    with pytest.raises(FusionError):          # nonexistent kept output
+        fuse_dfgs([(a, [("ext", "x")])], keep_outputs=[(0, 3)])
+    with pytest.raises(FusionError):          # no outputs at all
+        fuse_dfgs([(a, [("ext", "x")])], keep_outputs=[])
+
+
+def test_multi_output_part_wires_by_output_index():
+    a = _dfg(lambda x: (x + 1.0, x - 1.0), 1, "two")
+    b = _dfg(lambda p, q: p * q, 2, "mul")
+    fused, _ = fuse_dfgs(
+        [(a, [("ext", "x")]), (b, [("int", 0, 1), ("int", 0, 0)])],
+        keep_outputs=[(1, 0)], name="swap")    # note: outputs crossed
+    np.testing.assert_array_equal(
+        fused.evaluate([X])[0],
+        (X - np.float32(1.0)) * (X + np.float32(1.0)))
+
+
+# ------------------------------------------------- property: random DFG pairs
+
+def test_random_dfg_pair_fusion_matches_sequential():
+    """Hypothesis property (ISSUE 5 satellite): for ANY two small pointwise
+    kernels A, B — with B reading A's result and/or the shared input — the
+    fused DFG equals running A then B, bit for bit."""
+    hypothesis = pytest.importorskip("hypothesis")
+    given = hypothesis.given
+    st = hypothesis.strategies
+
+    ops2 = {0: lambda u, v: u + v, 1: lambda u, v: u - v,
+            2: lambda u, v: u * v}
+
+    def build_fn(code):
+        # code: list of (op, lhs, rhs) over a growing value stack
+        def fn(*args):
+            vals = list(args)
+            for op, li, ri in code:
+                a, b = vals[li % len(vals)], vals[ri % len(vals)]
+                vals.append(ops2[op % 3](a, b))
+            return vals[-1]
+        return fn
+
+    step = st.tuples(st.integers(0, 2), st.integers(0, 7),
+                     st.integers(0, 7))
+    codes = st.lists(step, min_size=1, max_size=5)
+
+    @given(code_a=codes, code_b=codes, data=st.data())
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def check(code_a, code_b, data):
+        fa, fb = build_fn(code_a), build_fn(code_b)
+        a = lower_to_dfg(fa, 1, "A")
+        b = lower_to_dfg(fb, 2, "B")          # reads (external x, A's out)
+        b_wiring = [("ext", "x"), ("int", 0, 0)]
+        fused, ext = fuse_dfgs([(a, [("ext", "x")]), (b, b_wiring)],
+                               keep_outputs=[(1, 0)], name="prop")
+        assert ext == ["x"]
+        x = np.asarray(data.draw(st.lists(
+            st.floats(-3, 3, allow_nan=False, width=32),
+            min_size=4, max_size=4)), np.float32)
+        seq = b.evaluate([x, a.evaluate([x])[0]])[0]
+        np.testing.assert_array_equal(
+            np.asarray(fused.evaluate([x])[0], np.float32),
+            np.asarray(seq, np.float32))
+
+    check()
+
+
+def test_fused_dfg_compiles_through_the_full_pipeline():
+    """The fused artifact is a first-class kernel: it maps, routes and runs
+    on the overlay exactly like a hand-written one."""
+    from repro.core.jit import jit_compile
+    from repro.core.overlay import OverlaySpec
+    a = _dfg(lambda x: x * 3.0 + 5.0, 1, "a")
+    b = _dfg(lambda t: t * t - 7.0, 1, "b")
+    fused, _ = fuse_dfgs([(a, [("ext", "x")]), (b, [("int", 0, 0)])],
+                         keep_outputs=[(1, 0)], name="pipeline")
+    ck = jit_compile(fused, OverlaySpec(width=8, height=8, dsp_per_fu=2))
+    want = b.evaluate([a.evaluate([X])[0]])[0]
+    np.testing.assert_allclose(ck.run_reference(X), want, rtol=1e-6)

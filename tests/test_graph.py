@@ -1,0 +1,288 @@
+"""Graph capture & fused replay (ISSUE 5 tentpole).
+
+``session.capture`` records kernel calls into a DAG without compiling or
+enqueueing; ``session.instantiate`` partitions the DAG into fused overlay
+configurations compiled through the normal cached/single-flight path; and
+``session.launch`` replays the whole graph paying the configuration charge
+once per PARTITION instead of once per node — with identical numerics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.cache import JITCache
+from repro.core.graph import (GraphError, KernelGraph, partition_graph)
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.core.runtime import Device
+from repro.core.session import Session
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+OPTS = CompileOptions(max_replicas=4)
+X = np.linspace(-1.5, 1.5, 1024).astype(np.float32)
+
+# a serving-shaped pipeline: distinct small stages, each its own config
+STAGES = [
+    (lambda x: x * 3.0 + 5.0, "s0"),
+    (lambda x: x * x - 2.0, "s1"),
+    (lambda x: x * 0.25 + 1.0, "s2"),
+    (lambda x: x * x + x, "s3"),
+]
+
+
+def _pipeline(sess, k=len(STAGES)):
+    with sess.capture("tenant-a", name="pipe") as g:
+        buf = g.input("x")
+        for fn, name in STAGES[:k]:
+            buf = g.call(fn, OPTS.replace(n_inputs=1, name=name), buf)
+    return g
+
+
+def _ref(x, k=len(STAGES)):
+    out = x
+    for fn, _ in STAGES[:k]:
+        out = np.asarray(fn(out), np.float32)
+    return out
+
+
+# ----------------------------------------------------------------- recording
+
+def test_capture_records_without_compiling_or_enqueueing():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        assert g.frozen and len(g.nodes) == 4
+        assert [b.ref() for b in g.outputs] == [("node", 3, 0)]
+        assert sess.cache.stats.misses == 0          # no pipeline stage ran
+        assert sess.cache.stats.insertions == 0
+        assert sess.stats()["queues"] == 0           # nothing enqueued
+
+
+def test_capture_validates_wiring():
+    with Session([Device("a", SPEC)]) as sess:
+        with sess.capture() as g:
+            x = g.input()
+            y = g.call(STAGES[0][0], OPTS.replace(n_inputs=1), x)
+            # raw arrays are not recordable dataflow
+            with pytest.raises(GraphError, match="g.input"):
+                g.call(STAGES[1][0], OPTS.replace(n_inputs=1), X)
+            # arity mismatch is caught at record time
+            with pytest.raises(GraphError, match="takes 1 buffers"):
+                g.call(STAGES[1][0], OPTS.replace(n_inputs=1), x, y)
+        # buffers from another capture are rejected
+        with sess.capture() as g2:
+            with pytest.raises(GraphError, match="different capture"):
+                g2.call(STAGES[0][0], OPTS.replace(n_inputs=1), x)
+            g2.input()
+            g2.call(STAGES[0][0], OPTS.replace(n_inputs=1), g2.inputs[0])
+        # frozen graphs reject further recording
+        with pytest.raises(GraphError, match="frozen"):
+            g.call(STAGES[0][0], OPTS.replace(n_inputs=1), x)
+
+
+def test_validate_catches_cycles_and_dangling_refs():
+    g = KernelGraph("manual")
+    x = g.input()
+    a = g.call(lambda v: v + 1.0, CompileOptions(n_inputs=1), x)
+    b = g.call(lambda v: v * 2.0, CompileOptions(n_inputs=1), a)
+    g.freeze()
+    # hand-wire a cycle: a's node now consumes b's output
+    g.nodes[a.nid].args = (b,)
+    with pytest.raises(GraphError, match="cycle"):
+        g.validate()
+    g.nodes[a.nid].args = (x,)
+    g.validate()                                     # restored: fine again
+    g.nodes[b.nid].args = \
+        (type(x)(g, "node", nid=a.nid, out_idx=7),)  # bad output slot
+    with pytest.raises(GraphError, match="output 7"):
+        g.validate()
+
+
+def test_capture_rides_the_frontend_cache_for_source_kernels():
+    with Session([Device("a", SPEC)]) as sess:
+        src = BENCHMARKS["poly1"][0]
+        with sess.capture(name="warmparse") as g:
+            b = g.input()
+            g.call(src, None, b)
+        assert sess.cache.stats.frontend_misses == 1
+        with sess.capture(name="warmparse2") as g2:
+            b = g2.input()
+            g2.call(src, None, b)
+        assert sess.cache.stats.frontend_hits == 1   # re-capture: no parse
+
+
+# -------------------------------------------------------------- partitioning
+
+def test_partitioning_fuses_whole_pipeline_when_it_fits():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+    parts = partition_graph(g, SPEC)
+    assert len(parts) == 1
+    assert parts[0].node_ids == [0, 1, 2, 3]
+    # intermediate buffers elided: the fused kernel is 1-in/1-out
+    assert len(parts[0].dfg.inputs) == 1 and len(parts[0].dfg.outputs) == 1
+    assert parts[0].deps == []
+
+
+def test_partition_budget_splits_the_dag_with_backward_deps_only():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+    # 1 FU holds at most dsp_per_fu=2 chained ops -> the 4-stage pipeline
+    # must split into at least two configurations
+    parts = partition_graph(g, SPEC, max_partition_fus=1)
+    assert 1 < len(parts) <= 4
+    for p in parts:
+        assert all(d < p.index for d in p.deps)       # acyclic by topo order
+    # cross-partition edges carry the intermediate through IO again
+    assert any(ref[0] == "node" for p in parts[1:] for ref in p.ext)
+
+
+def test_incompatible_opts_split_partitions():
+    with Session([Device("a", SPEC)]) as sess:
+        with sess.capture(name="mixed") as g:
+            x = g.input()
+            t = g.call(STAGES[0][0], OPTS.replace(n_inputs=1, seed=0), x)
+            g.call(STAGES[1][0], OPTS.replace(n_inputs=1, seed=9), t)
+    parts = partition_graph(g, SPEC)
+    assert len(parts) == 2                    # seed changes the artifact
+    assert parts[1].opts.seed == 9
+
+
+def test_partitioning_rejects_unmappable_node():
+    tiny = OverlaySpec(width=2, height=2)
+    with Session([Device("t", tiny)]) as sess:
+        with sess.capture(name="toolarge") as g:
+            a = g.input()
+            b = g.input()
+            g.call(BENCHMARKS["mibench"][0], None, a, b)
+    with pytest.raises(GraphError, match="does not fit"):
+        partition_graph(g, tiny)
+
+
+# ------------------------------------------------------- instantiate + launch
+
+def test_instantiate_compiles_one_fused_kernel_per_partition():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g).result()
+        assert gx.n_partitions == 1
+        assert sess.cache.stats.misses == 1          # ONE fused build
+        prog = gx.programs[0]
+        assert prog.compiled.plan.replicas >= 1
+        assert prog.tenant == "tenant-a"             # capture tenant rode in
+
+
+def test_graph_replay_matches_nodewise_and_oracle_exactly():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g)
+        ev = sess.launch(gx, X)
+        (got,) = [b.read() for b in ev.wait()]
+        np.testing.assert_array_equal(got, _ref(X))
+        ev2 = sess.launch_nodewise(g, X, tenant="tenant-b")
+        (got2,) = [b.read() for b in ev2.wait()]
+        np.testing.assert_array_equal(got, got2)     # bit-identical paths
+
+
+def test_graph_replay_pays_one_config_charge_per_partition():
+    """Acceptance: k fusable small kernels replay with <= ceil(k/size)
+    config charges (here: 1) vs k node-at-a-time, never a worse makespan."""
+    k = len(STAGES)
+    with Session([Device("a", SPEC)]) as sess:        # graph replay
+        g = _pipeline(sess)
+        gx = sess.instantiate(g)
+        ev = sess.launch(gx, X)
+        graph_charges = sess.config_charges()["charges"]
+        graph_end = ev.t_end_us
+        assert graph_charges == gx.n_partitions == 1
+    with Session([Device("a", SPEC)]) as sess:        # node-at-a-time
+        g = _pipeline(sess)
+        ev = sess.launch_nodewise(g, X)
+        node_charges = sess.config_charges()["charges"]
+        assert node_charges == k
+        assert graph_end <= ev.t_end_us               # makespan never worse
+    # replaying the instantiated graph again re-uses the loaded config
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g)
+        for _ in range(3):
+            ev = sess.launch(gx, X)
+        assert sess.config_charges()["charges"] == 1  # steady state: zero
+
+
+def test_cross_partition_deps_are_event_edges():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g, max_partition_fus=1)
+        assert gx.n_partitions >= 2
+        ev = sess.launch(gx, X)
+        (got,) = [b.read() for b in ev.wait()]
+        np.testing.assert_array_equal(got, _ref(X))
+        q = sess.queue_for("tenant-a", "a")
+        part_evs = [e for e in q.events
+                    if e.kernel_name.startswith("graph:pipe/p")]
+        assert len(part_evs) == gx.n_partitions
+        for a, b in zip(part_evs, part_evs[1:]):
+            assert a in b.deps                        # explicit wait_for edge
+            assert b.t_submit_us >= a.t_end_us
+        assert sess.config_charges()["charges"] == gx.n_partitions
+
+
+def test_multi_tenant_graph_and_kernel_traffic_interleave():
+    """Graph replay shares devices/queues with ordinary enqueues."""
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess, k=2)
+        gx = sess.instantiate(g)
+        fut = sess.compile(BENCHMARKS["poly1"][0], OPTS, tenant="tenant-b")
+        ev_g = sess.launch(gx, X)
+        ev_k = sess.enqueue(fut, X)
+        (got,) = [b.read() for b in ev_g.wait()]
+        np.testing.assert_array_equal(got, _ref(X, k=2))
+        np.testing.assert_allclose(
+            ev_k.wait()[0].read(), ((3 * X + 5) * X - 7) * X + 9,
+            rtol=1e-4, atol=1e-4)
+        assert sess.ledger_consistent()
+
+
+def test_launch_validates_input_count_and_release_frees_fabric():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g).result()
+        with pytest.raises(GraphError, match="expected 1 inputs"):
+            sess.launch(gx, X, X)
+        used = sess.devices[0].fu_used
+        assert used > 0
+        gx.release()
+        assert sess.devices[0].fu_used == 0
+        assert sess.ledger_consistent()
+
+
+# ------------------------------------------------------------------ warmness
+
+def test_reinstantiate_is_a_warm_cache_hit():
+    with Session([Device("a", SPEC)]) as sess:
+        g = _pipeline(sess)
+        with sess.instantiate(g).result():
+            pass                                      # released again
+        misses = sess.cache.stats.misses
+        gx2 = sess.instantiate(g).result()
+        assert sess.cache.stats.misses == misses      # no compiler stage ran
+        assert sess.cache.stats.hits >= 1
+        assert sess.stats()["graph_plans"] == 1       # partition cut memoized
+
+
+def test_reinstantiate_warm_across_restart_via_disk_tier(tmp_path):
+    persist = str(tmp_path / "jit")
+    with Session([Device("a", SPEC)], persist_dir=persist) as sess:
+        g = _pipeline(sess)
+        ev = sess.launch(sess.instantiate(g), X)
+        (want,) = [b.read() for b in ev.wait()]
+    # "restart": fresh Session, fresh in-memory cache, same disk tier
+    with Session([Device("a", SPEC)],
+                 cache=JITCache(persist_dir=persist)) as sess:
+        g = _pipeline(sess)
+        gx = sess.instantiate(g).result()
+        assert sess.cache.stats.misses == 0           # warm from disk
+        assert sess.cache.stats.disk_hits == gx.n_partitions
+        (got,) = [b.read() for b in sess.launch(gx, X).wait()]
+        np.testing.assert_array_equal(got, want)

@@ -248,9 +248,44 @@ def test_legacy_entry_points_share_the_session_core():
     """Scheduler.build and Context.build_program are shims over the opts
     path: same knobs -> same cache entry as build_opts/Session."""
     sched = Scheduler([Device("a", SPEC), Device("b", SPEC)])
-    p0 = sched.build(POLY1, max_replicas=4)                  # legacy shim
+    with pytest.warns(DeprecationWarning):
+        p0 = sched.build(POLY1, max_replicas=4)              # legacy shim
     p1 = sched.build_opts(POLY1, CompileOptions(max_replicas=4))
     assert p1.compiled is p0.compiled                        # cache hit
     assert p0.opts == CompileOptions(max_replicas=4)
     ctx = sched.contexts[p0.ctx.device.name]
     assert ctx.ledger_consistent()
+
+
+def test_legacy_shims_warn_deprecation_with_unchanged_behavior():
+    """ISSUE 5 satellite: every legacy entry point warns ONCE toward its
+    Session/CompileOptions replacement (ROADMAP migration table) while
+    producing the same artifact as the opts-first path."""
+    from repro.core.runtime import Context
+    cache = JITCache()
+    new = jit_compile(POLY1, SPEC, cache=cache,
+                      opts=CompileOptions(max_replicas=4, seed=1))
+    with pytest.warns(DeprecationWarning, match="CompileOptions"):
+        old = jit_compile(POLY1, SPEC, max_replicas=4, seed=1, cache=cache)
+    assert old is new                              # same cache entry
+
+    ctx = Context(Device("a", SPEC), cache=cache)
+    with pytest.warns(DeprecationWarning, match="Session.build"):
+        p_old = ctx.build_program(POLY1, max_replicas=4)
+    p_old.release()
+    p_new = ctx.build_program(POLY1, opts=CompileOptions(max_replicas=4))
+    assert p_old.compiled is p_new.compiled        # behavior unchanged
+    p_new.release()
+
+    sched = Scheduler([Device("b", SPEC)], cache=cache)
+    with pytest.warns(DeprecationWarning, match="Session.compile"):
+        sched.build(POLY1, max_replicas=4)
+
+    # the blessed paths stay silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        jit_compile(POLY1, SPEC, cache=cache,
+                    opts=CompileOptions(max_replicas=4, seed=1))
+        jit_compile(POLY1, SPEC, cache=cache)      # bare defaults: no knobs
+        sched.build_opts(POLY1, CompileOptions(max_replicas=2))
