@@ -6,12 +6,19 @@ Measures, for the paper's six-kernel suite:
      faster — it is a content-addressed lookup, no compiler stage runs);
   2. command-queue throughput in kernels/sec: wall-clock enqueue rate of the
      host simulation, and the modelled overlay rate (µs timeline), with and
-     without program switching (reconfig charge).
+     without program switching (reconfig charge);
+  3. static-verifier overhead (ISSUE 6): cold builds and warm hits at
+     ``verify_level`` off/fused/full — the default ("off") path must book
+     no verify stage at all, and "full" re-proves every artifact.
 
-    PYTHONPATH=src python benchmarks/jit_cache_perf.py
+    PYTHONPATH=src python benchmarks/jit_cache_perf.py \
+        [--update BENCH_compile.json]
 """
 
+import argparse
+import json
 import time
+from typing import Dict, List
 
 import numpy as np
 
@@ -82,9 +89,90 @@ def bench_queue_throughput(n_kernels: int = 200) -> None:
           f"kernels/s modelled ({reconfigs} reconfigs charged)")
 
 
+def bench_verify_overhead() -> Dict:
+    """Cold build + warm hit per kernel at every verify_level.
+
+    Gates (raise → CI fail):
+      * "off" books NO verify stage — the default path is untouched;
+      * "fused"/"full" book the stage and the artifact re-proves clean;
+      * "full" warm hits re-verify without ever quarantining a good entry.
+    """
+    print("\nverifier overhead (cold ms / verify ms booked):")
+    print("kernel     |   off    |  fused   |   full   | full hit-reverify")
+    print("-----------|----------|----------|----------|------------------")
+    rows = []
+    for name in sorted(BENCHMARKS):
+        src, reps, _ = BENCHMARKS[name]
+        row: Dict = {"name": name}
+        for level in ("off", "fused", "full"):
+            cache = JITCache()
+            opts = CompileOptions(max_replicas=reps, verify_level=level)
+            t0 = time.perf_counter()
+            ck = jit_compile(src, SPEC, opts=opts, cache=cache)
+            row[f"cold_ms_{level}"] = (time.perf_counter() - t0) * 1e3
+            booked = ck.stage_times_ms.get("verify")
+            if level == "off" and booked is not None:
+                raise SystemExit(f"{name}: verify stage booked on the "
+                                 f"default (off) path")
+            if level != "off" and booked is None:
+                raise SystemExit(f"{name}: verify_level={level} booked no "
+                                 f"verify stage")
+            row[f"verify_ms_{level}"] = booked or 0.0
+            if level == "full":
+                t0 = time.perf_counter()
+                assert jit_compile(src, SPEC, opts=opts, cache=cache) is ck
+                row["hit_reverify_ms"] = (time.perf_counter() - t0) * 1e3
+                if cache.stats.verify_quarantined:
+                    raise SystemExit(f"{name}: clean artifact quarantined")
+        rows.append(row)
+        print(f"{name:<11}| {row['cold_ms_off']:8.2f} "
+              f"| {row['cold_ms_fused']:8.2f} "
+              f"| {row['cold_ms_full']:8.2f} "
+              f"| {row['hit_reverify_ms']:8.4f} ms "
+              f"(verify {row['verify_ms_full']:.2f} ms)")
+    mean_off = sum(r["cold_ms_off"] for r in rows) / len(rows)
+    mean_full = sum(r["cold_ms_full"] for r in rows) / len(rows)
+    frac = sum(r["verify_ms_full"] for r in rows) / max(
+        sum(r["cold_ms_full"] for r in rows), 1e-9)
+    print(f"mean cold: off {mean_off:.2f} ms, full {mean_full:.2f} ms "
+          f"({100 * frac:.1f}% of the full build is verification)")
+    return dict(spec=dict(width=SPEC.width, height=SPEC.height,
+                          dsp_per_fu=SPEC.dsp_per_fu),
+                rows=rows, mean_cold_ms_off=mean_off,
+                mean_cold_ms_full=mean_full, verify_fraction_full=frac)
+
+
+def run() -> List[Dict]:
+    """run.py harness entry: the verify-overhead table as CSV rows."""
+    section = bench_verify_overhead()
+    rows = [dict(name=f"verify/{r['name']}/{level}",
+                 us_per_call=r[f"cold_ms_{level}"] * 1e3,
+                 derived=f"verify {r[f'verify_ms_{level}']:.3f} ms")
+            for r in section["rows"] for level in ("off", "fused", "full")]
+    rows.append(dict(
+        name="verify/mean_fraction_full",
+        us_per_call=section["mean_cold_ms_full"] * 1e3,
+        derived=f"{100 * section['verify_fraction_full']:.1f}% of full "
+                f"cold build is verification"))
+    return rows
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", metavar="PATH", default=None,
+                    help="write the verify-overhead section into an "
+                         "existing BENCH_compile.json under 'verify'")
+    args = ap.parse_args()
     worst = bench_cold_vs_warm()
     bench_queue_throughput()
+    section = bench_verify_overhead()
+    if args.update:
+        with open(args.update) as f:
+            doc = json.load(f)
+        doc["verify"] = section
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"updated {args.update} [verify]")
     if worst < 10:
         raise SystemExit(1)
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.jit import jit_compile

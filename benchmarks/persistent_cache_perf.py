@@ -30,7 +30,7 @@ import subprocess
 import sys
 import tempfile
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 KERNELS = ("chebyshev", "mibench", "qspline", "sgfilter")
 SMOKE_KERNELS = ("chebyshev", "sgfilter")

@@ -10,7 +10,6 @@ eats fabric (paper Fig. 5).
     PYTHONPATH=src python examples/elastic_restart.py
 """
 
-import dataclasses
 import tempfile
 
 import jax

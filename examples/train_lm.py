@@ -10,7 +10,6 @@ import dataclasses
 import tempfile
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_arch

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import Dict, List, Tuple
+from typing import Dict
 
 from repro.core.fuse import FUGraph
 from repro.core.latency import LatencyAssignment

@@ -48,7 +48,7 @@ import struct
 import threading
 from collections import OrderedDict
 from pathlib import Path
-from typing import Any, Callable, Iterable, Optional, Tuple, Union
+from typing import Callable, Iterable, Optional, Union
 
 from repro.core.dfg import DFG
 from repro.core.options import CompileOptions
@@ -327,6 +327,10 @@ class CacheStats:
     # in-flight build instead of starting its own pipeline run.  These never
     # reach get()/put(), so without the counter the dedup win is invisible
     singleflight_hits: int = 0
+    # entries evicted because the repro.analysis artifact verifier
+    # (CompileOptions.verify_level="full") failed to re-prove their
+    # legality — treated exactly like corrupt DiskCache pickles
+    verify_quarantined: int = 0
 
     @property
     def lookups(self) -> int:
@@ -348,6 +352,7 @@ class CacheStats:
                     disk_hits=self.disk_hits,
                     disk_template_hits=self.disk_template_hits,
                     singleflight_hits=self.singleflight_hits,
+                    verify_quarantined=self.verify_quarantined,
                     hit_rate=round(self.hit_rate, 4))
 
 
@@ -380,13 +385,13 @@ class JITCache:
             raise ValueError("template_capacity must be >= 1")
         self.capacity = capacity
         self.template_capacity = template_capacity
-        self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
-        self._templates: "OrderedDict[CacheKey, Any]" = OrderedDict()
-        self._frontends: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()  # lock: _lock
+        self._templates: "OrderedDict[CacheKey, Any]" = OrderedDict()  # lock: _lock
+        self._frontends: "OrderedDict[CacheKey, Any]" = OrderedDict()  # lock: _lock
         self._frontend_capacity = max(256, capacity)
         self.disk: Optional[DiskCache] = \
             DiskCache(persist_dir) if persist_dir is not None else None
-        self.stats = CacheStats()
+        self.stats = CacheStats()          # lock: _lock
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------- protocol
@@ -437,7 +442,26 @@ class JITCache:
         with self._lock:
             self.stats.build_failures += 1
 
-    def _insert(self, table, key: CacheKey, obj, capacity: int) -> None:
+    def note_singleflight(self) -> None:
+        """Count a compile request that joined an identical in-flight build.
+        The Session calls this under ITS lock; cache stats belong to the
+        cache's lock, so the increment takes it here (lock order
+        session -> cache, never reversed)."""
+        with self._lock:
+            self.stats.singleflight_hits += 1
+
+    def quarantine(self, key: CacheKey) -> None:
+        """Evict an entry the artifact verifier refused to certify
+        (``verify_level="full"``), memory AND disk tiers — the same
+        treatment a corrupt DiskCache pickle gets, so a poisoned artifact
+        cannot be served to the next requester while the caller rebuilds."""
+        with self._lock:
+            self._entries.pop(key, None)
+            self.stats.verify_quarantined += 1
+            if self.disk is not None:
+                self.disk._quarantine(self.disk._path(key))
+
+    def _insert(self, table, key: CacheKey, obj, capacity: int) -> None:  # lock: held(_lock)
         table[key] = obj
         table.move_to_end(key)
         while len(table) > capacity:

@@ -12,9 +12,9 @@ count is the paper's "FU requirement" for the kernel.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, Iterable, List, Sequence, Tuple
 
-from repro.core.dfg import DFG, Node, dce, optimize
+from repro.core.dfg import DFG, dce, optimize
 
 
 class FusionError(ValueError):
@@ -252,4 +252,18 @@ def fuse_dfgs(parts: Sequence[Tuple[DFG, Sequence[FuseRef]]],
         fused.add("output", (out_src[(i, oi)],), name=f"O{pos}")
     if not fused.outputs:
         raise FusionError(f"{name}: fusion exposes no outputs")
-    return (optimize(fused) if run_optimize else fused), list(ext_ids.keys())
+    fused = optimize(fused) if run_optimize else fused
+    # every fused DFG goes through the static analyzer before it can reach
+    # a compile: a fusion bug (dropped dependency, dead operator, broken IO
+    # perimeter) surfaces here as a FusionError with structured findings,
+    # not as a mis-mapped artifact.  Lazy import — repro.analysis depends
+    # on this module.
+    from repro.analysis import dfg_checks as _dfg_checks
+    bad = [d for d in _dfg_checks.check_dfg(fused, origin="fuse")
+           if d.severity == "error"]
+    if bad:
+        raise FusionError(
+            f"{name}: fused DFG failed semantic checks: "
+            + "; ".join(str(d) for d in bad[:4])
+            + (f" (+{len(bad) - 4} more)" if len(bad) > 4 else ""))
+    return fused, list(ext_ids.keys())

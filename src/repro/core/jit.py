@@ -49,11 +49,10 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core import dfg as dfg_mod
 from repro.core import template as template_mod
 from repro.core.bitstream import Bitstream, generate
 from repro.core.cache import JITCache, make_cache_key, make_template_key
@@ -244,6 +243,18 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     g = lower_cached(kernel, n_inputs, name, cache=cache)
     times["frontend"] = (time.perf_counter() - t0) * 1e3
 
+    if opts.verify_level != "off":
+        # semantic gate BEFORE any mapping stage: a malformed DFG (undefined
+        # producer, broken IO perimeter, cycle) fails here with structured
+        # diagnostics instead of an obscure KeyError deep inside clustering
+        # or placement.  VerificationError propagates like any mapping error.
+        from repro.analysis.dfg_checks import assert_clean
+        t0 = time.perf_counter()
+        try:
+            assert_clean(g, origin="jit")
+        finally:
+            times["verify"] = (time.perf_counter() - t0) * 1e3
+
     t0 = time.perf_counter()
     fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
     times["fuse"] = (time.perf_counter() - t0) * 1e3
@@ -266,7 +277,21 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                              opts=opts, fug=fug)
         hit = cache.get(key)
         if hit is not None:
-            return hit
+            if opts.verify_level != "full":
+                return hit
+            # "full" re-proves every artifact it is about to hand out; a
+            # hit that fails the re-proof is quarantined exactly like a
+            # corrupt DiskCache pickle and the build falls through to a
+            # fresh compile below
+            from repro.analysis.artifact import verify_artifact
+            from repro.analysis.diagnostics import ERROR as _A_ERROR
+            t0 = time.perf_counter()
+            bad = [d for d in verify_artifact(hit)
+                   if d.severity == _A_ERROR]
+            times["verify"] = (time.perf_counter() - t0) * 1e3
+            if not bad:
+                return hit
+            cache.quarantine(key)
 
     # ---- template path: P&R one replica, stamp R copies, gap-fill ---------
     tpl_out = None
@@ -342,6 +367,18 @@ def jit_compile(kernel: Union[str, Callable, DFG],
 
     ck = CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
                         routing, lat, bs, prog, times, pr_path=pr_path)
+    if opts.verify_level == "full":
+        # the artifact re-proof runs BEFORE cache.put: an artifact that
+        # fails its own legality re-proof must never become someone else's
+        # cache hit.  VerificationError propagates to the caller like any
+        # other mapping failure.
+        from repro.analysis.artifact import assert_valid
+        t0 = time.perf_counter()
+        try:
+            assert_valid(ck)
+        finally:
+            times["verify"] = times.get("verify", 0.0) + \
+                (time.perf_counter() - t0) * 1e3
     if cache is not None and key is not None:
         cache.put(key, ck)
     return ck

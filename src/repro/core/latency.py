@@ -38,7 +38,6 @@ class LatencyAssignment:
 
 def balance(fug: FUGraph, spec: OverlaySpec, routing: RoutingResult
             ) -> LatencyAssignment:
-    fu_lat = spec.fu_latency * 1  # per primitive; chain of k ops → k*fu_lat
     # member count per sid (dual-DSP FUs have 2 chained primitives)
     depth_of = {s.sid: len(s.members) * spec.fu_latency for s in fug.supers}
 

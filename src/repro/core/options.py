@@ -34,6 +34,8 @@ DEFAULT_MIN_TEMPLATE_FILL = 0.95
 
 _PR_MODES = ("auto", "template", "joint")
 
+_VERIFY_LEVELS = ("off", "fused", "full")
+
 
 @dataclasses.dataclass(frozen=True)
 class CompileOptions:
@@ -55,8 +57,20 @@ class CompileOptions:
     # recorded KernelGraph is cut into partitions — so it is excluded from
     # key_tail(); a different cut reaches the cache as a different fused DFG
     max_partition_fus: Optional[int] = None
+    # static-analysis gate (repro.analysis): "off" = build as before;
+    # "fused" = run the A0xx semantic checks on the DFG being compiled;
+    # "full" = additionally re-prove every artifact's legality (A2xx) —
+    # fresh builds before they enter the cache, cache hits before they are
+    # returned (failed hits are quarantined like corrupt DiskCache
+    # entries).  Verification never changes the artifact, so it is
+    # excluded from key_tail(): verified and unverified builds share cache
+    # entries.
+    verify_level: str = "off"
 
     def __post_init__(self) -> None:
+        if self.verify_level not in _VERIFY_LEVELS:
+            raise ValueError(f"verify_level must be off|fused|full, "
+                             f"got {self.verify_level!r}")
         if self.pr_mode not in _PR_MODES:
             raise ValueError(f"pr_mode must be auto|template|joint, "
                              f"got {self.pr_mode!r}")
@@ -77,7 +91,10 @@ class CompileOptions:
         the plan — not the raw cap — is what gets hashed.
         ``max_partition_fus`` is absent too: it only steers how a recorded
         graph is partitioned, and a different partitioning reaches the cache
-        as a different fused-DFG fingerprint.  The format matches the
+        as a different fused-DFG fingerprint.  ``verify_level`` is absent
+        because verification never changes the artifact — a kernel built
+        under ``"full"`` is byte-identical to one built under ``"off"``,
+        so both must hit the same cache entry.  The format matches the
         pre-Session ad-hoc tuple byte for byte, so existing disk-cache
         tiers stay warm across the API migration."""
         return (f"{self.seed}:{self.place_effort:g}:{self.pr_mode}:"

@@ -12,7 +12,7 @@ partial reconfiguration — no XLA recompile.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -247,7 +247,7 @@ class CommandQueue:
             self._compact_timeline()
         return done
 
-    def _compact_timeline(self) -> None:
+    def _compact_timeline(self) -> None:  # lock: held(timeline_lock)
         """Losslessly merge overlapping/adjacent busy intervals (gap-finding
         sees the identical idle structure) and drop config switches buried
         inside the merged prefix, keeping the one active entering each gap.

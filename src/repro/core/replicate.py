@@ -10,7 +10,7 @@ elastic resize or node failure (DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 from repro.core.fuse import FUGraph
 from repro.core.overlay import OverlaySpec

@@ -70,8 +70,10 @@ class Device:
     """One overlay instance living on a fabric region."""
     name: str
     spec: OverlaySpec
-    fu_used: int = 0
-    io_used: int = 0
+    # a Device is mutated through whichever Context/Scheduler reference
+    # holds it, so the ledger contract is lock-NAME-based, not path-based
+    fu_used: int = 0  # lock: any(lock)
+    io_used: int = 0  # lock: any(lock)
 
     @property
     def fu_free(self) -> int:
@@ -82,7 +84,7 @@ class Device:
         return self.spec.n_io - self.io_used
 
     # ------------------------------------------------------------- ledger
-    def debit(self, fus: int, io: int = 0) -> None:
+    def debit(self, fus: int, io: int = 0) -> None:  # lock: held(lock)
         if fus > self.fu_free or io > self.io_free:
             raise RuntimeError_(
                 f"{self.name}: debit of {fus} FUs / {io} IO exceeds free "
@@ -90,7 +92,7 @@ class Device:
         self.fu_used += fus
         self.io_used += io
 
-    def credit(self, fus: int, io: int = 0) -> None:
+    def credit(self, fus: int, io: int = 0) -> None:  # lock: held(lock)
         self.fu_used = max(0, self.fu_used - fus)
         self.io_used = max(0, self.io_used - io)
 
@@ -127,9 +129,9 @@ class Context:
                  cache: Optional[JITCache] = None):
         self.device = device or Platform.default().devices[0]
         self.cache = cache
-        self.programs: List["Program"] = []
-        self.reserved_fus = 0
-        self.reserved_io = 0
+        self.programs: List["Program"] = []  # lock: lock
+        self.reserved_fus = 0  # lock: lock
+        self.reserved_io = 0  # lock: lock
         # guards the device ledger + resident-program list: Session builds
         # run on a worker pool, and an unguarded release() racing a build
         # (or a concurrent release()) could double-credit the ledger
@@ -146,13 +148,13 @@ class Context:
         # it under timeline_lock — a torn gap-scan would double-book the
         # engine
         self.timeline_lock = threading.RLock()
-        self._engine_busy: List[tuple] = []        # [(start_us, end_us)]
-        self._config_switches: List[tuple] = []    # [(t_us, config_id)] asc
-        self._engine_end = 0.0
+        self._engine_busy: List[tuple] = []  # lock: timeline_lock
+        self._config_switches: List[tuple] = []  # lock: timeline_lock
+        self._engine_end = 0.0  # lock: timeline_lock
         # modelled µs of JIT builds currently in flight toward this device
-        # (booked by the Session / Scheduler, always under the fleet lock) —
+        # (booked by the Session / Scheduler under the estimator lock) —
         # the "compile-in-flight" term of the makespan ranking
-        self.pending_compile_us = 0.0
+        self.pending_compile_us = 0.0  # lock: any(_est_lock)
 
     # ----------------------------------------------------------- modelling
     @property
@@ -265,26 +267,26 @@ class Program:
                  opts: Optional[CompileOptions] = None,
                  tenant: Optional[str] = None):
         self.ctx = ctx
-        self.compiled = ck
-        self.build_ms = build_ms
+        self.compiled = ck  # lock: ctx.lock
+        self.build_ms = build_ms  # lock: ctx.lock
         self.source = source
         # the exact options this program was built with — resize/re-inflate
         # rebuilds derive theirs via opts.replace(max_replicas=...)
         self.opts = opts if opts is not None else CompileOptions()
         self.tenant = tenant
-        self.released = False
+        self.released = False  # lock: ctx.lock
         # sticky owner intent: release() during a scheduler resize window
         # (victim transiently non-resident, so the call no-ops) must not be
         # lost when the resize re-seats the program — the scheduler honors
         # it after the swap/restore (see Scheduler._resize)
-        self.release_requested = False
+        self.release_requested = False  # lock: ctx.lock
         # the replica count this program was first built at; shedding swaps a
         # smaller artifact into `compiled` but leaves this untouched, so the
         # scheduler knows how far to re-inflate once fabric frees up
         self.planned_replicas = ck.plan.replicas
         # free-resource level (fu, io) at the last re-inflation attempt that
         # produced no growth; retried only once more fabric than that frees
-        self.grow_failed_free: Optional[tuple] = None
+        self.grow_failed_free: Optional[tuple] = None  # lock: any(_lock)
 
     def create_kernel(self) -> "Kernel":
         if self.released:
@@ -415,19 +417,19 @@ class Scheduler:
             d.name: Context(d, cache=self.cache) for d in devices}
         # tenant -> priority (higher keeps replicas longer); unknown
         # tenants (and None) rank at 0
-        self.priorities: Dict[str, int] = {}
+        self.priorities: Dict[str, int] = {}  # lock: _lock
         # kernel fingerprint -> EWMA of observed build time (µs); feeds the
         # compile-in-flight term of the makespan ranking.  Guarded by its
         # own small lock, NOT the fleet lock: Session.compile books its
         # estimate at submit time and must never block behind a build that
         # is holding the fleet lock for a full pipeline run
-        self._build_est: Dict[str, float] = {}
+        self._build_est: Dict[str, float] = {}  # lock: _est_lock
         self._est_lock = threading.Lock()
         self._lock = threading.RLock()
         # guards against recursive rebalancing: shedding and re-inflation
         # both release() programs mid-flight, which must not re-trigger the
         # release hook (only ever read/written under the fleet lock)
-        self._rebalancing = False
+        self._rebalancing = False  # lock: _lock
         for ctx in self.contexts.values():
             ctx.on_release = self._on_release
 

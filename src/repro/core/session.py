@@ -251,22 +251,22 @@ class Session:
         # single-flight map: (kernel fingerprint, opts) -> (future, record).
         # Entries live only while the build is in flight; sequential repeat
         # compiles are the JITCache's job, not this map's
-        self._inflight: Dict[Tuple, Tuple] = {}
-        self._queues: Dict[Tuple[str, str], CommandQueue] = {}
+        self._inflight: Dict[Tuple, Tuple] = {}  # lock: _lock
+        self._queues: Dict[Tuple[str, str], CommandQueue] = {}  # lock: _lock
         # graph-plan memo: make_graph_key -> List[Partition].  Partitioning
         # is pure in (graph content, spec, budget), so repeat instantiations
         # of one pipeline skip the cut; the fused ARTIFACTS warm through the
         # ordinary JITCache (single-flight + disk tier)
-        self._graph_plans: Dict[str, list] = {}
+        self._graph_plans: Dict[str, list] = {}  # lock: _lock
         # nodewise-replay memo: (graph fingerprint, tenant) -> node futures.
         # Without it every repeat replay would re-key each node against a
         # snapshot its own resident predecessors shrank, building (and
         # leaking) a fresh Program per request — a real pre-graph server
         # holds its Program handles across requests, so the baseline must
-        self._nodewise_futs: Dict[Tuple, list] = {}
-        self._graph_count = 0
+        self._nodewise_futs: Dict[Tuple, list] = {}  # lock: _lock
+        self._graph_count = 0  # lock: _lock
         self._t0 = time.perf_counter()
-        self._closed = False
+        self._closed = False  # lock: _lock
 
     # ------------------------------------------------------------ plumbing
     @property
@@ -309,7 +309,9 @@ class Session:
             entry = self._inflight.get(key)
             if entry is not None:
                 fut, record = entry
-                self.cache.stats.singleflight_hits += 1
+                # the stats counter belongs to the cache's lock domain, not
+                # the session's — mutate it through the cache's own API
+                self.cache.note_singleflight()
             else:
                 record = dict(t_submit_us=self.now_us(), t_start_us=None,
                               t_done_us=None)
@@ -445,6 +447,19 @@ class Session:
         if partitions is None:
             partitions = partition_graph(
                 graph, spec, max_partition_fus=max_partition_fus)
+            if any(n.opts.verify_level != "off" for n in graph.nodes):
+                # any node opting into verification gates the whole cut:
+                # run the A1xx race/alias analysis on the fresh plan before
+                # it is memoized or a single partition build is submitted
+                from repro.analysis import (ERROR, VerificationError,
+                                            check_graph, check_partitions)
+                diags = check_graph(graph) + check_partitions(graph,
+                                                              partitions)
+                bad = [d for d in diags if d.severity == ERROR]
+                if bad:
+                    raise VerificationError(
+                        f"{graph.name}: partition plan failed verification",
+                        bad)
             with self._lock:
                 self._graph_plans.setdefault(key, partitions)
         tenant = tenant if tenant is not None else graph.tenant

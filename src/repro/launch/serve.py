@@ -56,7 +56,6 @@ def main() -> None:
     # prefill: feed prompt tokens one step at a time through the decode path
     # (token-recurrent prefill; a blockwise prefill is the prefill_* shape)
     t0 = time.perf_counter()
-    tok = jnp.asarray(prompt[:, :1])
     logits = None
     for i in range(args.prompt_len):
         logits, cache = serve_step(params, cache,

@@ -15,7 +15,6 @@ import json
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -15,7 +15,7 @@ mesh axis when divisible (qwen3: 128e/16 = 8 per shard); otherwise (mixtral:
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,7 @@ inspectable (tests assert they really placed & routed).
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +26,20 @@ from repro.core.overlay import OverlaySpec
 _SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
 _CACHE: Dict[str, CompiledKernel] = {}
 
+# every overlay-expressible datapath this module JITs, by name:
+# name -> (traceable python callable, arity).  One registry so the static
+# analyzer (`python -m repro.analysis`) and benchmarks can sweep exactly
+# the kernels serving code uses, without calling the model entry points.
+KERNELS: Dict[str, tuple] = {
+    "squared_relu": (lambda a: a.max(0.0) * a.max(0.0), 1),
+    "gate_mul2": (lambda a, b, c: a * b * c, 3),
+    "residual_add": (lambda a, b: a + b, 2),
+}
 
-def _get(name: str, fn: Callable, n_inputs: int) -> CompiledKernel:
+
+def _get(name: str) -> CompiledKernel:
     if name not in _CACHE:
+        fn, n_inputs = KERNELS[name]
         _CACHE[name] = jit_compile(
             fn, _SPEC, opts=CompileOptions(n_inputs=n_inputs, name=name,
                                            max_replicas=1,
@@ -39,28 +49,24 @@ def _get(name: str, fn: Callable, n_inputs: int) -> CompiledKernel:
 
 def squared_relu(x):
     """max(x,0)^2 — nemotron-4's activation; fully overlay-expressible."""
-    ck = _get("squared_relu", lambda a: a.max(0.0) * a.max(0.0), 1)
-    return ck(x)
+    return _get("squared_relu")(x)
 
 
 def gated_silu(g, u):
     """silu(g) * u.  sigmoid is transcendental (host jnp); the two products
     are the overlay datapath."""
     s = jax.nn.sigmoid(g.astype(jnp.float32)).astype(g.dtype)
-    ck = _get("gate_mul2", lambda a, b, c: a * b * c, 3)
-    return ck(g, s, u)
+    return _get("gate_mul2")(g, s, u)
 
 
 def ssm_gate(y, z):
     """y * silu(z) for the Mamba2 output gate."""
     s = jax.nn.sigmoid(z.astype(jnp.float32)).astype(z.dtype)
-    ck = _get("gate_mul2", lambda a, b, c: a * b * c, 3)
-    return ck(y, z, s)
+    return _get("gate_mul2")(y, z, s)
 
 
 def residual_add(x, r):
-    ck = _get("residual_add", lambda a, b: a + b, 2)
-    return ck(x, r)
+    return _get("residual_add")(x, r)
 
 
 def compiled_kernels() -> Dict[str, CompiledKernel]:

@@ -10,7 +10,7 @@ cross-attn KV (computed once from the encoder memory).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,9 +15,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
-from repro.models.common import ArchConfig, spec
-from repro.models.mamba2 import (MambaLM, init_mamba_block, mamba_block,
-                                 mamba_specs, ssm_dims)
+from repro.models.common import spec
+from repro.models.mamba2 import MambaLM, init_mamba_block, mamba_block
 
 
 class HybridLM(MambaLM):

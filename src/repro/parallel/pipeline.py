@@ -15,7 +15,7 @@ tests/test_pipeline.py on a host mesh.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -81,8 +81,6 @@ def make_pipeline_train_step(layer_fn: Callable, n_stages: int,
         # broadcast final outputs from the last stage to all members
         mask = (sid == n_stages - 1).astype(outputs.dtype)
         return lax.psum(outputs * mask, axis)
-
-    p_spec = jax.tree.map(lambda _: P(axis), {"_": 0})
 
     def run(stage_params, x):
         sp = jax.tree.map(lambda _: P(axis), stage_params)

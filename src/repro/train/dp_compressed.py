@@ -14,7 +14,6 @@ the uncompressed step.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict
 
 import jax

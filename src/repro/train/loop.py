@@ -13,7 +13,6 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.replicate import plan_cluster

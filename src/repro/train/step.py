@@ -3,7 +3,7 @@ the dry-run) lower onto the mesh."""
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,505 @@
+"""Static verifier (`repro.analysis`): every documented diagnostic code
+fires on a seeded defect, clean inputs stay clean, the `verify_level`
+gate re-proves artifacts bit-identically and quarantines corruption, and
+`docs/diagnostics.md` stays in sync with the code registry."""
+
+import copy
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.analysis import (CODES, ERROR, WARNING, Pass, PassManager,
+                            Report, Target, VerificationError, assert_clean,
+                            assert_valid, check_dfg, check_graph,
+                            check_partitions, verify_artifact)
+from repro.analysis.cli import main as analysis_main
+from repro.core.cache import JITCache
+from repro.core.dfg import DFG
+from repro.core.graph import GraphBuffer, KernelGraph, partition_graph
+from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.configs.paper_suite import BENCHMARKS
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every code exercised by a seeded-defect test in this file; the registry
+# sync test at the bottom asserts nothing documented goes untested
+SEEDED = set()
+
+
+def codes_of(diags):
+    return {d.code for d in diags}
+
+
+def seeded(*codes):
+    SEEDED.update(codes)
+    return set(codes)
+
+
+# ------------------------------------------------------------- DFG seeds
+
+def clean_dfg(name="k"):
+    g = DFG(name)
+    a = g.add("input", name="a")
+    b = g.add("input", name="b")
+    m = g.add("mul", (a, b))
+    s = g.add("add", (m, a))
+    g.add("output", (s,), name="O0")
+    return g, a, b, m, s
+
+
+def test_clean_dfg_has_no_findings():
+    g, *_ = clean_dfg()
+    assert check_dfg(g) == []
+    assert assert_clean(g) == []
+
+
+def test_a001_undefined_producer():
+    g, a, b, m, s = clean_dfg()
+    g.nodes[s].args = (m, 999)
+    assert seeded("A001") <= codes_of(check_dfg(g))
+    with pytest.raises(VerificationError) as ei:
+        assert_clean(g, origin="test")
+    assert "A001" in str(ei.value)
+    assert ei.value.diagnostics  # structured findings ride along
+
+
+def test_a002_dead_node_is_a_warning_with_fixit():
+    g, a, b, m, s = clean_dfg()
+    g.add("abs", (m,))                       # unreferenced by any output
+    ds = [d for d in check_dfg(g) if d.code in seeded("A002")]
+    assert ds and all(d.severity == WARNING for d in ds)
+    assert "dce" in ds[0].fixit
+    assert_clean(g)                          # warnings do not raise
+
+
+def test_a003_dangling_io():
+    g, a, b, m, s = clean_dfg()
+    g.inputs.remove(a)                       # input node off the perimeter
+    g.outputs.append(m)                      # op node posing as an output
+    assert seeded("A003") <= codes_of(check_dfg(g))
+
+
+def test_a004_arity_and_unknown_op():
+    g, a, b, m, s = clean_dfg()
+    g.nodes[m].args = (a,)                   # mul takes 2
+    g.nodes[s].op = "frobnicate"
+    cs = codes_of(check_dfg(g))
+    assert seeded("A004") <= cs
+
+
+def test_a005_cycle():
+    g, a, b, m, s = clean_dfg()
+    g.nodes[m].args = (a, s)                 # mul <-> add cycle
+    assert seeded("A005") <= codes_of(check_dfg(g))
+
+
+def test_a006_imm_misuse():
+    g, a, b, m, s = clean_dfg()
+    g.nodes[s].op, g.nodes[s].args, g.nodes[s].imm = "abs", (m,), 3.0
+    c = g.add("const", imm=1.0)
+    g.nodes[c].imm = None                    # const without a value
+    assert seeded("A006") <= codes_of(check_dfg(g))
+
+
+# ----------------------------------------------------------- graph seeds
+
+def unary_dfg(name="k1"):
+    g = DFG(name)
+    a = g.add("input", name="x")
+    m = g.add("mul", (a, a))
+    g.add("output", (m,), name="O0")
+    return g
+
+
+def capture_pair(name="tg"):
+    """Two chained unary kernels recorded without a Session (the lowerer
+    passes DFG sources straight through).  Distinct seeds make the opts
+    incompatible so the partition cut is guaranteed one node per part."""
+    g = KernelGraph(name, lower=lambda s, o, n: s)
+    x = g.input("x")
+    t = g.call(unary_dfg("k1"), CompileOptions(seed=0), x)
+    g.call(unary_dfg("k2"), CompileOptions(seed=1), t)
+    g.freeze()
+    return g
+
+
+def test_clean_graph_and_cut_have_no_findings():
+    g = capture_pair()
+    assert check_graph(g) == []
+    parts = partition_graph(g, SPEC)
+    assert check_partitions(g, parts) == []
+
+
+def test_a101_use_before_def():
+    g = capture_pair()
+    # node 0 reads node 1: producer replays after consumer
+    g.nodes[0].args = (GraphBuffer(g, "node", nid=1, out_idx=0),)
+    assert seeded("A101") <= codes_of(check_graph(g))
+    g2 = capture_pair()
+    g2.nodes[1].args = (GraphBuffer(g2, "node", nid=99, out_idx=0),)
+    assert {"A101"} <= codes_of(check_graph(g2))
+
+
+def test_a102_duplicate_nid():
+    g = capture_pair()
+    g.nodes[1].nid = 0
+    assert seeded("A102") <= codes_of(check_graph(g))
+
+
+def test_a103_input_range():
+    g = capture_pair()
+    g.nodes[0].args = (GraphBuffer(g, "in", index=5),)
+    assert seeded("A103") <= codes_of(check_graph(g))
+
+
+def test_a104_dangling_graph_output():
+    g = capture_pair()
+    g.outputs = [GraphBuffer(g, "node", nid=99, out_idx=0)]
+    assert seeded("A104") <= codes_of(check_graph(g))
+
+
+def nodewise_cut(g):
+    """One partition per node (the incompatible seeds force the split)."""
+    return partition_graph(g, SPEC)
+
+
+def test_a105_missing_partition_dep():
+    g = capture_pair()
+    parts = nodewise_cut(g)
+    assert len(parts) == 2 and parts[1].deps == [0]
+    parts[1].deps = []
+    assert seeded("A105") <= codes_of(check_partitions(g, parts))
+
+
+def test_a106_partition_coverage():
+    g = capture_pair()
+    parts = nodewise_cut(g)
+    parts[0].node_ids = []                   # node 0 now unassigned
+    assert seeded("A106") <= codes_of(check_partitions(g, parts))
+    parts2 = nodewise_cut(g)
+    parts2[1].node_ids = [0, 1]              # node 0 assigned twice
+    assert {"A106"} <= codes_of(check_partitions(g, parts2))
+
+
+def test_a107_partition_order():
+    g = capture_pair()
+    for bad_deps in ([0], [99], [1]):        # self, nonexistent, forward
+        parts = nodewise_cut(g)
+        parts[0].deps = list(bad_deps)
+        assert seeded("A107") <= codes_of(check_partitions(g, parts))
+
+
+def test_a108_illegal_alias():
+    g = capture_pair()
+    parts = nodewise_cut(g)
+    parts[1].ext = [("node", 0, 0), ("node", 0, 0)]   # one buffer, two slots
+    assert seeded("A108") <= codes_of(check_partitions(g, parts))
+    parts2 = nodewise_cut(g)
+    parts2[1].ext = [("node", 1, 0)]          # feeds itself "externally"
+    assert {"A108"} <= codes_of(check_partitions(g, parts2))
+
+
+def test_a109_fused_io_mismatch():
+    g = capture_pair()
+    parts = nodewise_cut(g)
+    parts[1].outputs = []                    # fused kernel still has one
+    assert seeded("A109") <= codes_of(check_partitions(g, parts))
+    parts2 = nodewise_cut(g)
+    parts2[1].outputs = [(0, 0)]             # exposes a non-member
+    assert {"A109"} <= codes_of(check_partitions(g, parts2))
+
+
+# -------------------------------------------------------- artifact seeds
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Every paper-suite benchmark compiled at its paper replica count."""
+    out = {}
+    for name, (src, reps, _oracle) in BENCHMARKS.items():
+        out[name] = jit_compile(src, SPEC,
+                                opts=CompileOptions(max_replicas=reps))
+    return out
+
+
+def test_every_benchmark_artifact_reproves_bit_identically(artifacts):
+    """Acceptance: verify_level="full" re-proves every benchmark artifact
+    from scratch — zero findings, including the A208 bit-identity check."""
+    for name, ck in artifacts.items():
+        assert verify_artifact(ck) == [], name
+        assert_valid(ck)
+
+
+def corrupt(ck):
+    return copy.deepcopy(ck)
+
+
+def test_a201_placement_illegal(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    key = next(iter(ck.placement.fu_pos))
+    ck.placement.fu_pos[key] = (99, 99)
+    assert seeded("A201") <= codes_of(verify_artifact(ck))
+    with pytest.raises(VerificationError):
+        assert_valid(ck)
+
+
+def test_a202_pad_overuse(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    key = next(iter(ck.placement.in_pos))
+    ck.placement.in_pos[key] = (0, 0)        # interior tile is not a pad
+    assert seeded("A202") <= codes_of(verify_artifact(ck))
+
+
+def test_a203_route_discontinuity(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    ck.routing.nets[0].path.insert(1, (99, 99))
+    assert seeded("A203") <= codes_of(verify_artifact(ck))
+    ck2 = corrupt(artifacts["poly1"])
+    del ck2.routing.nets[0]                  # dropped dataflow edge
+    assert {"A203"} <= codes_of(verify_artifact(ck2))
+
+
+def test_a204_channel_overuse(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    net = next(n for n in ck.routing.nets if len(n.path) >= 2)
+    hop = (net.path[0], net.path[1])
+    fake = copy.deepcopy(net)
+    for i in range(SPEC.channel_width + 1):
+        f = copy.deepcopy(fake)
+        f.src = (90 + i, 0)                  # distinct sources => no sharing
+        f.path = list(hop)
+        ck.routing.nets.append(f)
+    assert seeded("A204") <= codes_of(verify_artifact(ck))
+
+
+def test_a205_latency_misalign(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    key = next(iter(ck.latency.ready))
+    ck.latency.ready[key] += 1               # certificate no longer re-proves
+    assert seeded("A205") <= codes_of(verify_artifact(ck))
+
+
+def test_a206_delay_capacity(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    assert ck.latency.delays, "poly1 should have delay chains"
+    key = next(iter(ck.latency.delays))
+    ck.latency.delays[key] = SPEC.max_delay + 7
+    assert seeded("A206") <= codes_of(verify_artifact(ck))
+
+
+def test_a207_ledger_mismatch(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    ck.plan = dataclasses.replace(ck.plan, fus_used=ck.plan.fus_used + 1)
+    assert seeded("A207") <= codes_of(verify_artifact(ck))
+
+
+def test_a208_bitstream_mismatch(artifacts):
+    ck = corrupt(artifacts["poly1"])
+    body = bytearray(ck.bitstream.data)
+    body[-1] ^= 0xFF                         # payload flip, header intact
+    ck.bitstream = dataclasses.replace(ck.bitstream, data=bytes(body))
+    assert seeded("A208") <= codes_of(verify_artifact(ck))
+
+
+# --------------------------------------------- verify_level jit integration
+
+def test_verify_level_validation_and_cache_key():
+    with pytest.raises(ValueError):
+        CompileOptions(verify_level="paranoid")
+    a = CompileOptions(verify_level="off")
+    b = CompileOptions(verify_level="full")
+    # excluded from the key tail: verified/unverified share cache entries
+    assert a.key_tail() == b.key_tail()
+
+
+def test_verify_levels_build_and_book_time():
+    src, reps, _ = BENCHMARKS["poly2"]
+    for level in ("off", "fused", "full"):
+        ck = jit_compile(src, SPEC, opts=CompileOptions(
+            max_replicas=reps, verify_level=level), cache=JITCache())
+        if level == "off":
+            assert "verify" not in ck.stage_times_ms
+        else:
+            assert ck.stage_times_ms["verify"] >= 0.0
+
+
+def test_fused_gate_rejects_corrupt_dfg():
+    src, reps, _ = BENCHMARKS["poly1"]
+    ck = jit_compile(src, SPEC, opts=CompileOptions(max_replicas=reps))
+    g = ck.dfg.copy()
+    g.nodes[g.outputs[0]].args = (9999,)
+    g.optimized = True                       # claims normal form
+    with pytest.raises(VerificationError) as ei:
+        jit_compile(g, SPEC, opts=CompileOptions(
+            max_replicas=reps, verify_level="fused"), cache=JITCache())
+    assert any(d.code == "A001" for d in ei.value.diagnostics)
+
+
+def test_full_hit_quarantines_corrupted_cache_entry():
+    """Acceptance: a cache hit whose routing was corrupted in memory is
+    quarantined (counted like a corrupt disk entry) and rebuilt fresh."""
+    src, reps, _ = BENCHMARKS["poly1"]
+    cache = JITCache()
+    opts = CompileOptions(max_replicas=reps, verify_level="full")
+    ck = jit_compile(src, SPEC, opts=opts, cache=cache)
+    assert jit_compile(src, SPEC, opts=opts, cache=cache) is ck    # clean hit
+    ck.routing.nets[0].path.insert(1, (99, 99))
+    ck2 = jit_compile(src, SPEC, opts=opts, cache=cache)
+    assert ck2 is not ck
+    assert cache.stats.verify_quarantined == 1
+    assert verify_artifact(ck2) == []
+    assert cache.stats.as_dict()["verify_quarantined"] == 1
+
+
+# ------------------------------------------------------------ pass manager
+
+def test_pass_manager_crash_becomes_a901():
+    pm = PassManager([Pass("boom", lambda t: 1 / 0)])
+    report = pm.run([Target("t0", "dfg", object())])
+    assert seeded("A901") <= codes_of(report.diagnostics)
+    assert not report.ok
+
+
+def test_report_json_roundtrip_and_gate():
+    g, a, b, m, s = clean_dfg()
+    g.nodes[s].args = (m, 999)
+    r = Report(check_dfg(g), targets_analyzed=1)
+    assert not r.ok
+    doc = json.loads(r.to_json())
+    assert doc["counts"]["error"] >= 1
+    assert doc["diagnostics"][0]["code"] == "A001"
+    clean = Report([], targets_analyzed=1)
+    assert clean.ok and clean.counts()["error"] == 0
+
+
+def test_severity_filter_orders_errors_first():
+    g, a, b, m, s = clean_dfg()
+    g.add("abs", (m,))                       # warning
+    g.nodes[s].args = (m, 999)               # error
+    r = Report(check_dfg(g), targets_analyzed=1)
+    sevs = [d.severity for d in r.filtered("warning")]
+    assert sevs == sorted(sevs, key=("error", "warning", "info").index)
+    assert all(d.severity == ERROR for d in r.errors())
+
+
+# --------------------------------------------------------------------- CLI
+
+def test_cli_clean_run_and_json(tmp_path):
+    out = tmp_path / "report.json"
+    rc = analysis_main(["dfgs", "graphs", "locklint", "--json", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["counts"]["error"] == 0
+    assert doc["targets_analyzed"] > 0
+
+
+def test_cli_list_codes_mentions_docs(capsys):
+    assert analysis_main(["--list-codes"]) == 0
+    out = capsys.readouterr().out
+    for code in CODES:
+        assert code in out
+    assert "docs/diagnostics.md" in out
+
+
+def test_cli_rejects_unknown_suite():
+    with pytest.raises(SystemExit):
+        analysis_main(["no-such-suite-or-path"])
+
+
+# ------------------------------------------------------------- docs sync
+
+def test_docs_table_matches_code_registry():
+    path = os.path.join(REPO, "docs", "diagnostics.md")
+    rows = {}
+    for line in open(path, encoding="utf-8"):
+        if line.startswith("| A"):
+            cells = [c.strip() for c in line.strip().strip("|").split("|")]
+            rows[cells[0]] = cells
+    assert set(rows) == set(CODES), (
+        "docs/diagnostics.md out of sync with repro.analysis CODES — "
+        "regenerate the table from the registry")
+    for code, info in CODES.items():
+        assert rows[code][1] == info.severity
+        assert rows[code][2] == info.title
+
+
+def test_every_documented_code_has_a_seeded_defect_test():
+    missing = set(CODES) - SEEDED - {"A301", "A302"}   # seeded in
+    assert not missing, missing                        # test_locklint.py
+
+
+# ------------------------------------------------- hypothesis properties
+# guarded import, not importorskip: that would skip the whole module when
+# hypothesis is absent instead of just these two tests
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def chain_dfg(draw):
+        """A clean linear DFG of 1..6 binary ops over two inputs."""
+        g = DFG("prop")
+        a = g.add("input", name="a")
+        b = g.add("input", name="b")
+        cur = a
+        for op in draw(st.lists(
+                st.sampled_from(["add", "mul", "sub", "max"]),
+                min_size=1, max_size=6)):
+            cur = g.add(op, (cur, b))
+        g.add("output", (cur,), name="O0")
+        return g
+
+    @given(chain_dfg(), st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_prop_mutated_dfg_fires_matching_code(g, data):
+        assert check_dfg(g) == []
+        ops = [n for n in g.nodes.values()
+               if n.op not in ("input", "output", "const")]
+        victim = data.draw(st.sampled_from(ops))
+        mutation, code = data.draw(st.sampled_from([
+            ("missing_arg", "A001"), ("bad_arity", "A004"),
+            ("unknown_op", "A004"), ("imm_misuse", "A006"),
+            ("off_perimeter", "A003"),
+        ]))
+        if mutation == "missing_arg":
+            victim.args = tuple(list(victim.args[:-1]) + [12345])
+        elif mutation == "bad_arity":
+            victim.args = victim.args[:-1]
+        elif mutation == "unknown_op":
+            victim.op = "bogus"
+        elif mutation == "imm_misuse":
+            victim.op, victim.args, victim.imm = \
+                "abs", victim.args[:1], 1.5
+        elif mutation == "off_perimeter":
+            g.inputs.pop()
+        assert code in codes_of(check_dfg(g))
+
+    @given(st.integers(0, 10_000), st.integers(1, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_prop_full_verify_rejects_any_routing_corruption(seed_idx,
+                                                             bump):
+        """verify_level="full" catches a bogus hop spliced into ANY net."""
+        ck = copy.deepcopy(_poly1_artifact())
+        nets = ck.routing.nets
+        net = nets[seed_idx % len(nets)]
+        net.path.insert(min(bump, len(net.path) - 1), (97, 42))
+        errs = [d for d in verify_artifact(ck) if d.severity == ERROR]
+        assert errs and any(d.code in ("A203", "A204", "A205")
+                            for d in errs)
+
+    _POLY1_CK = []
+
+    def _poly1_artifact():
+        if not _POLY1_CK:
+            src, reps, _ = BENCHMARKS["poly1"]
+            _POLY1_CK.append(jit_compile(
+                src, SPEC, opts=CompileOptions(max_replicas=reps)))
+        return _POLY1_CK[0]

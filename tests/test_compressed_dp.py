@@ -9,7 +9,6 @@ import pytest
 
 pytestmark = pytest.mark.slow    # ~18 s convergence run; tier-1 skips it
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ALL_ARCHS, reduced_config
 from repro.data.pipeline import SyntheticTokens

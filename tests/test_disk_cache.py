@@ -7,7 +7,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 from repro.configs.paper_suite import BENCHMARKS
 from repro.core.cache import DiskCache, JITCache

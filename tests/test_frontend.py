@@ -3,9 +3,8 @@
 import numpy as np
 import pytest
 
-from repro.core.dfg import DFG, optimize, trace
-from repro.core.ir import (compile_opencl_to_dfg, module_to_dfg,
-                           optimize_module, parse_kernel)
+from repro.core.dfg import optimize, trace
+from repro.core.ir import compile_opencl_to_dfg, parse_kernel
 
 CHEB = """
 __kernel void chebyshev(__global int *A, __global int *B)

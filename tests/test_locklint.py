@@ -1,0 +1,255 @@
+"""Lock-discipline lint (A3xx).
+
+Synthetic modules exercise every rule of the ``# lock:`` grammar — plain
+NAME, dotted OWNER.NAME, ``any(NAME)``, def-line ``held(NAME)``, the
+``__init__`` exemption, the cross-file registry — and the four runtime
+modules that carry the real contract must lint clean.
+"""
+
+import os
+import textwrap
+
+from repro.analysis import lint_files
+from repro.analysis.locklint import DEFAULT_TARGETS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_src(tmp_path, sources):
+    """Write ``{filename: source}`` under tmp_path and lint them as one
+    unit (shared attribute registry, like the CLI does)."""
+    paths = []
+    for name, src in sources.items():
+        p = tmp_path / name
+        p.write_text(textwrap.dedent(src))
+        paths.append(str(p))
+    return lint_files(paths, root=str(tmp_path))
+
+
+def codes_of(diags):
+    return [d.code for d in diags]
+
+
+# -------------------------------------------------------------- clean paths
+
+def test_clean_module_has_no_findings(tmp_path):
+    diags = lint_src(tmp_path, {"box.py": """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []              # lock: _lock
+                self.items.append(0)         # __init__ is exempt
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def reset(self):
+                with self._lock:
+                    self.items = []
+                    del self.items[:]
+        """})
+    assert diags == []
+
+
+def test_init_exemption_is_init_only(tmp_path):
+    diags = lint_src(tmp_path, {"box.py": """
+        class Box:
+            def __init__(self):
+                self.items = []              # lock: _lock
+
+            def not_init(self):
+                self.items = [1]             # unprotected
+        """})
+    assert codes_of(diags) == ["A301"]
+    assert "not_init" in diags[0].message or diags[0].span.line > 0
+
+
+# ----------------------------------------------------- every mutation kind
+
+def test_a301_fires_on_every_mutation_kind(tmp_path):
+    diags = lint_src(tmp_path, {"box.py": """
+        import bisect
+        import heapq
+
+        class Box:
+            def __init__(self):
+                self.items = []              # lock: _lock
+                self.table = {}              # lock: _lock
+                self.count = 0               # lock: _lock
+
+            def plain(self):
+                self.items = [1]
+
+            def augmented(self):
+                self.count += 1
+
+            def method(self):
+                self.items.append(1)
+
+            def deleter(self):
+                del self.table["k"]
+
+            def subscript(self):
+                self.table["k"] = 1
+
+            def arg_mutator(self):
+                bisect.insort(self.items, 3)
+                heapq.heappush(self.items, 4)
+        """})
+    assert codes_of(diags) == ["A301"] * 7
+
+
+def test_nested_function_does_not_inherit_the_with(tmp_path):
+    # the nested def may run long after the with-block exits
+    diags = lint_src(tmp_path, {"box.py": """
+        class Box:
+            def __init__(self):
+                self.items = []              # lock: _lock
+
+            def sched(self, pool):
+                with self._lock:
+                    def later():
+                        self.items.append(1)
+                    pool.submit(later)
+        """})
+    assert codes_of(diags) == ["A301"]
+
+
+# ------------------------------------------------------------- the grammar
+
+def test_dotted_owner_lock(tmp_path):
+    diags = lint_src(tmp_path, {"prog.py": """
+        class Program:
+            def __init__(self, ctx):
+                self.ctx = ctx
+                self.compiled = None         # lock: ctx.lock
+
+            def good(self, ck):
+                with self.ctx.lock:
+                    self.compiled = ck
+
+            def bad(self, ck):
+                with self._lock:             # wrong lock entirely
+                    self.compiled = ck
+        """})
+    assert codes_of(diags) == ["A301"]
+    assert "ctx.lock" in diags[0].message
+
+
+def test_any_lock_accepts_every_owner(tmp_path):
+    diags = lint_src(tmp_path, {"dev.py": """
+        class Device:
+            def __init__(self):
+                self.fu_used = 0             # lock: any(lock)
+
+        class Fleet:
+            def seize(self, dev):
+                with dev.lock:               # some owner's lock: fine
+                    dev.fu_used += 1
+
+            def steal(self, dev):
+                dev.fu_used += 1             # no lock at all
+        """})
+    assert codes_of(diags) == ["A301"]
+    assert "steal" in diags[0].message or diags[0].span.line >= 10
+
+
+def test_held_def_annotation_trusts_the_caller(tmp_path):
+    diags = lint_src(tmp_path, {"cache.py": """
+        class Cache:
+            def __init__(self):
+                self._entries = {}           # lock: _lock
+
+            def _insert(self, k, v):         # lock: held(_lock)
+                self._entries[k] = v
+
+            def put(self, k, v):
+                with self._lock:
+                    self._insert(k, v)
+        """})
+    assert diags == []
+
+
+def test_a302_flags_broken_annotations(tmp_path):
+    diags = lint_src(tmp_path, {"bad.py": """
+        class Box:
+            def __init__(self):
+                self.items = []              # lock: not a spec!!
+        """})
+    assert "A302" in codes_of(diags)
+
+
+def test_a302_on_unparsable_file(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    diags = lint_files([str(p)], root=str(tmp_path))
+    assert codes_of(diags) == ["A302"]
+
+
+# ------------------------------------------------------ cross-file registry
+
+def test_cross_file_mutation_checked_against_owners_lock(tmp_path):
+    """The PR-4 single-flight bug shape: session-side code mutating a
+    cache-owned counter under the SESSION lock, not the cache's."""
+    sources = {
+        "cachelike.py": """
+            class Cache:
+                def __init__(self):
+                    self.stats = {}          # lock: _lock
+
+                def bump(self, k):
+                    with self._lock:
+                        self.stats[k] = self.stats.get(k, 0) + 1
+            """,
+        "sessionlike.py": """
+            class Session:
+                def __init__(self, cache):
+                    self.cache = cache
+
+                def dedup(self, key):
+                    with self._lock:         # wrong domain: session's lock
+                        self.cache.stats[key] = 1
+            """,
+    }
+    diags = lint_src(tmp_path, sources)
+    assert codes_of(diags) == ["A301"]
+    assert "sessionlike.py" in diags[0].span.file
+
+    sources["sessionlike.py"] = """
+        class Session:
+            def __init__(self, cache):
+                self.cache = cache
+
+            def dedup(self, key):
+                with self.cache._lock:       # the owner's lock: fine
+                    self.cache.stats[key] = 1
+        """
+    assert lint_src(tmp_path, sources) == []
+
+
+# --------------------------------------------------------- the real modules
+
+def test_runtime_modules_lint_clean():
+    """The documented contract over runtime/cache/session/queue holds."""
+    diags = lint_files(DEFAULT_TARGETS, root=REPO)
+    assert diags == [], [str(d) for d in diags]
+
+
+def test_contract_is_actually_declared():
+    """Guard against the lint passing vacuously: the four modules must
+    register a meaningful number of lock-annotated attributes."""
+    import ast
+
+    from repro.analysis.locklint import _scan_declarations
+
+    total = 0
+    for rel in DEFAULT_TARGETS:
+        path = os.path.join(REPO, rel)
+        src = open(path, encoding="utf-8").read()
+        decl = _scan_declarations(rel, ast.parse(src), src.splitlines())
+        assert not decl.diags, [str(d) for d in decl.diags]
+        total += len(decl.attrs)
+    assert total >= 20, f"only {total} lock-annotated attributes declared"

@@ -1,16 +1,11 @@
 """Place & route & latency-balance & bitstream: structural invariants."""
 
-import numpy as np
 import pytest
 
 from repro.core.bitstream import parse_header
-from repro.core.fuse import to_fu_graph
-from repro.core.ir import compile_opencl_to_dfg
 from repro.core.jit import jit_compile
-from repro.core.latency import LatencyError, balance
 from repro.core.overlay import OverlaySpec, RoutingGraph
-from repro.core.place import PlacementError, place
-from repro.core.route import route
+from repro.core.place import PlacementError
 from repro.configs.paper_suite import BENCHMARKS
 
 SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)

@@ -9,8 +9,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dfg import DFG, cse, constant_fold, dce, optimize, trace
-from repro.core.fuse import fuse_muladd, to_fu_graph
+from repro.core.dfg import optimize, trace
+from repro.core.fuse import fuse_muladd
 from repro.core.ir import _lower_consts
 from repro.core.jit import jit_compile
 from repro.core.overlay import OverlaySpec
