@@ -1,0 +1,246 @@
+"""Chaos serving benchmark (ISSUE 7 acceptance benchmark).
+
+Replays one deterministic mixed-tenant serving trace twice on an identical
+two-overlay fleet:
+
+  * **fault-free** — no fault plan, the plain ISSUE-4/5 serving path;
+  * **chaos**      — a seeded :class:`~repro.core.faults.FaultPlan` injects
+    ~5% transient faults across the compile pipeline (place/route) and the
+    execution path (queue_submit/device_exec), and HALFWAY through the
+    trace one device is declared lost (``Session.fail_device``): its
+    resident Programs migrate and its in-flight events re-execute on the
+    survivor.
+
+Gates (CI fails on any):
+
+  1. **completeness** — every request in the chaos run completes (the
+     recovery ladder absorbed every injected fault and the device loss);
+  2. **correctness**  — every chaos output is BIT-IDENTICAL to the
+     fault-free run's (sha256 over the output buffers);
+  3. **bounded degradation** — the chaos fleet makespan is <= ``--gate``
+     (default 2.0) x the fault-free makespan.
+
+    PYTHONPATH=src python benchmarks/chaos_serving_perf.py \
+        [--gate 2.0] [--json out.json] [--update BENCH_compile.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core.cache import JITCache
+from repro.core.faults import FaultPlan
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.core.recovery import RetryPolicy
+from repro.core.runtime import Device
+from repro.core.session import Session
+
+SPEC_KW = dict(width=8, height=8, dsp_per_fu=2)
+# seed chosen so the 5%/3% rates demonstrably fire on BOTH planes over
+# this trace (compile: place; execution: queue_submit + device_exec)
+FAULT_SEED = 4
+COMPILE_FAULT_RATE = 0.05       # per place/route visit
+EXEC_FAULT_RATE = 0.03          # per submit/exec visit
+
+# (op, tenant, kernel, arg): "build" arg = max_replicas; "run" arg = items.
+# Mixed tenants, interleaved builds and runs — the same shape as the
+# queue-scheduling trace, so the two benchmarks describe one serving story.
+TRACE = [
+    ("build", "tenant-a", "poly1", 2),
+    *[("run", "tenant-a", "poly1", 100_000)] * 6,
+    ("build", "tenant-b", "chebyshev", 2),
+    *[("run", "tenant-b", "chebyshev", 80_000)] * 5,
+    ("build", "tenant-c", "mibench", 2),
+    *[("run", "tenant-c", "mibench", 80_000)] * 4,
+    # -------- device failure lands here (halfway) in the chaos run -------
+    *[("run", "tenant-a", "poly1", 100_000)] * 5,
+    ("build", "tenant-d", "qspline", 1),
+    *[("run", "tenant-d", "qspline", 60_000)] * 4,
+    *[("run", "tenant-b", "chebyshev", 80_000)] * 4,
+]
+FAIL_AT_OP = len(TRACE) // 2
+
+
+def _chaos_plan() -> FaultPlan:
+    return (FaultPlan(seed=FAULT_SEED)
+            .add("place", rate=COMPILE_FAULT_RATE)
+            .add("route", rate=COMPILE_FAULT_RATE)
+            .add("queue_submit", rate=EXEC_FAULT_RATE)
+            .add("device_exec", rate=EXEC_FAULT_RATE))
+
+
+def run_trace(chaos: bool) -> Dict:
+    """Replay TRACE; returns modelled fleet metrics + per-request output
+    digests (order-aligned with the trace's run ops)."""
+    spec = OverlaySpec(**SPEC_KW)
+    plan = _chaos_plan() if chaos else None
+    sess = Session([Device("ovl0", spec), Device("ovl1", spec)],
+                   cache=JITCache(capacity=64), faults=plan,
+                   retry=RetryPolicy(backoff_us=100.0, max_backoff_us=2_000.0,
+                                     enqueue_retries=6))
+    rng = np.random.default_rng(0)
+    progs: Dict = {}
+    events, digests = [], []
+    failed_device: Optional[str] = None
+    for i, (op, tenant, kname, arg) in enumerate(TRACE):
+        if chaos and i == FAIL_AT_OP:
+            # kill whichever device carries resident programs right now —
+            # migration + event re-execution must keep every answer intact
+            by_dev = [p.ctx.device.name for p in progs.values()
+                      if not p.released]
+            failed_device = max(set(by_dev), key=by_dev.count)
+            # fail at the midpoint of the device's MODELLED timeline: work
+            # modelled to finish after that instant is lost with the device
+            # and must re-execute on the survivor
+            at = sess.contexts[failed_device].engine_end_us * 0.5
+            sess.fail_device(failed_device, at_us=at)
+        if op == "build":
+            progs[(tenant, kname)] = sess.build(
+                BENCHMARKS[kname][0], CompileOptions(max_replicas=arg),
+                tenant=tenant)
+        else:
+            prog = progs[(tenant, kname)]
+            bufs = [rng.uniform(-1, 1, arg).astype(np.float32)
+                    for _ in prog.compiled.dfg.inputs]
+            events.append(sess.enqueue(prog, *bufs, tenant=tenant))
+    for ev in events:
+        h = hashlib.sha256()
+        for buf in ev.wait():
+            h.update(np.ascontiguousarray(buf.read()).tobytes())
+        digests.append(h.hexdigest())
+    makespan = max(c.engine_end_us for c in sess.contexts.values())
+    stats = sess.stats()
+    result = dict(chaos=chaos, makespan_us=round(makespan, 1),
+                  requests=len(events), digests=digests,
+                  recovery={k: v for k, v in stats["recovery"].items()
+                            if k != "breakers"},
+                  ledger_consistent=sess.ledger_consistent())
+    if chaos:
+        result["failed_device"] = failed_device
+        result["faults"] = stats["faults"]
+    sess.close()
+    return result
+
+
+def bench() -> Dict:
+    clean = run_trace(chaos=False)
+    dirty = run_trace(chaos=True)
+    n_runs = sum(1 for op, *_ in TRACE if op == "run")
+    return dict(
+        spec=SPEC_KW, trace_ops=len(TRACE), fail_at_op=FAIL_AT_OP,
+        fault_seed=FAULT_SEED,
+        fault_rates=dict(compile=COMPILE_FAULT_RATE, exec=EXEC_FAULT_RATE),
+        fault_free=clean, chaos=dirty,
+        all_complete=(dirty["requests"] == n_runs),
+        bit_identical=(dirty["digests"] == clean["digests"]),
+        degradation=round(dirty["makespan_us"] /
+                          max(clean["makespan_us"], 1e-9), 3))
+
+
+def check_gate(result: Dict, gate: float) -> List[str]:
+    failures = []
+    if not result["all_complete"]:
+        failures.append(
+            f"chaos run completed {result['chaos']['requests']} of "
+            f"{sum(1 for op, *_ in TRACE if op == 'run')} requests")
+    if not result["bit_identical"]:
+        bad = sum(1 for a, b in zip(result["chaos"]["digests"],
+                                    result["fault_free"]["digests"])
+                  if a != b)
+        failures.append(f"{bad} chaos outputs differ from fault-free run")
+    if result["degradation"] > gate:
+        failures.append(
+            f"degraded makespan {result['degradation']}x fault-free "
+            f"(gate {gate}x): {result['chaos']['makespan_us']} vs "
+            f"{result['fault_free']['makespan_us']} us")
+    for key in ("fault_free", "chaos"):
+        if not result[key]["ledger_consistent"]:
+            failures.append(f"{key} run left the resource ledger "
+                            f"inconsistent")
+    injected = result["chaos"]["faults"]["injected"]
+    if not injected:
+        failures.append("chaos run injected no faults — the gate proved "
+                        "nothing; raise the rates or the trace length")
+    return failures
+
+
+def run() -> List[Dict]:
+    """run.py suite entry point."""
+    result = bench()
+    out = []
+    for key in ("fault_free", "chaos"):
+        r = result[key]
+        rec = r["recovery"]
+        healed = (rec["retries"] + rec["enqueue_retries"] +
+                  rec["fallback_joint"] + rec["fallback_nodewise"] +
+                  rec["requeued_events"])
+        out.append(dict(
+            name=f"chaos_serving/{key}",
+            us_per_call=r["makespan_us"],
+            derived=(f"fleet makespan {r['makespan_us']:.0f}us "
+                     f"{r['requests']} requests, {healed} recoveries, "
+                     f"migrated={rec['migrated_programs']}")))
+    out.append(dict(
+        name="chaos_serving/degradation",
+        us_per_call=0.0,
+        derived=(f"{result['degradation']}x fault-free makespan; "
+                 f"bit_identical={result['bit_identical']} "
+                 f"all_complete={result['all_complete']}")))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", type=float, default=2.0,
+                    help="max degraded/fault-free makespan ratio "
+                         "(default 2.0; <= 0 disables gating)")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--update", metavar="PATH", default=None,
+                    help="merge the result into an existing benchmark JSON "
+                         "under the 'chaos' key")
+    args = ap.parse_args()
+    result = bench()
+
+    for key in ("fault_free", "chaos"):
+        r = result[key]
+        print(f"{key:<11} fleet makespan {r['makespan_us']:>10.1f} us  "
+              f"({r['requests']} requests)")
+        nonzero = {k: v for k, v in r["recovery"].items()
+                   if v and k != "breaker_trips"}
+        print(f"  recovery: {nonzero}")
+    chaos = result["chaos"]
+    print(f"chaos: failed device {chaos['failed_device']} at op "
+          f"{result['fail_at_op']}, injected {chaos['faults']['injected']}")
+    print(f"degradation {result['degradation']}x, "
+          f"bit_identical={result['bit_identical']}, "
+          f"all_complete={result['all_complete']}")
+
+    failures = check_gate(result, args.gate) if args.gate > 0 else []
+    result["gate"] = args.gate
+    result["gate_failures"] = failures
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    if args.update:
+        with open(args.update) as f:
+            doc = json.load(f)
+        doc["chaos"] = result
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"updated {args.update} [chaos]")
+    if failures:
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

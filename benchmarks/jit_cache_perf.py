@@ -9,7 +9,10 @@ Measures, for the paper's six-kernel suite:
      without program switching (reconfig charge);
   3. static-verifier overhead (ISSUE 6): cold builds and warm hits at
      ``verify_level`` off/fused/full — the default ("off") path must book
-     no verify stage at all, and "full" re-proves every artifact.
+     no verify stage at all, and "full" re-proves every artifact;
+  4. fault-injection overhead (ISSUE 7): with no fault plan the recovery
+     plane must cost nothing — ``fault_point`` is one thread-local read
+     and a fault-free serving loop books zero recovery work.
 
     PYTHONPATH=src python benchmarks/jit_cache_perf.py \
         [--update BENCH_compile.json]
@@ -142,9 +145,60 @@ def bench_verify_overhead() -> Dict:
                 mean_cold_ms_full=mean_full, verify_fraction_full=frac)
 
 
+def bench_fault_free_overhead() -> Dict:
+    """ISSUE 7 gate: with no fault plan the serving path does ZERO recovery
+    work — every ``fault_point`` is one thread-local read, the retry loop
+    runs exactly one attempt, and no breaker ever leaves ``closed``.
+
+    Gates (raise → CI fail):
+      * a warm fault-free serving loop leaves every recovery counter at 0;
+      * every build record shows exactly 1 attempt;
+      * every device breaker is closed with 0 trips.
+    """
+    from repro.core.faults import fault_point
+    from repro.core.runtime import Device as _Device
+    from repro.core.session import Session
+
+    # raw cost of an instrumented stage boundary with chaos off
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fault_point("place", "bench")
+    ns_per_point = (time.perf_counter() - t0) / n * 1e9
+
+    sess = Session([_Device("d", SPEC)])
+    opts = CompileOptions(max_replicas=4)
+    x = np.linspace(-2, 2, 4096).astype(np.float32)
+    futs = [sess.compile(BENCHMARKS[k][0], opts) for k in sorted(BENCHMARKS)
+            for _ in range(4)]                       # warm repeats dedup
+    for fut in futs:
+        fut.result(120)         # settle ALL builds (incl. replica shedding)
+    for fut in futs:            # ...then serve from the steady-state fleet
+        sess.enqueue(fut, *([x] * len(fut.result().compiled.dfg.inputs)))
+    stats = sess.stats()
+    rec = stats["recovery"]
+    breakers = rec.pop("breakers")
+    attempts = sorted({f._record["attempts"] for f in futs})
+    sess.close()
+
+    print(f"\nfault-free overhead: fault_point {ns_per_point:.0f} ns/site "
+          f"(no plan), recovery counters {rec}, attempts {attempts}")
+    if not sess.recovery.all_zero():
+        raise SystemExit(f"fault-free serving loop booked recovery work: "
+                         f"{rec}")
+    if attempts != [1]:
+        raise SystemExit(f"fault-free builds took {attempts} attempts, "
+                         f"expected exactly 1")
+    if any(b["state"] != "closed" or b["trips"] for b in breakers.values()):
+        raise SystemExit(f"fault-free run moved a breaker: {breakers}")
+    return dict(fault_point_ns=ns_per_point, recovery=rec,
+                attempts=attempts)
+
+
 def run() -> List[Dict]:
     """run.py harness entry: the verify-overhead table as CSV rows."""
     section = bench_verify_overhead()
+    overhead = bench_fault_free_overhead()
     rows = [dict(name=f"verify/{r['name']}/{level}",
                  us_per_call=r[f"cold_ms_{level}"] * 1e3,
                  derived=f"verify {r[f'verify_ms_{level}']:.3f} ms")
@@ -154,6 +208,11 @@ def run() -> List[Dict]:
         us_per_call=section["mean_cold_ms_full"] * 1e3,
         derived=f"{100 * section['verify_fraction_full']:.1f}% of full "
                 f"cold build is verification"))
+    rows.append(dict(
+        name="faults/fault_point_off_ns",
+        us_per_call=overhead["fault_point_ns"] * 1e-3,
+        derived=f"fault-free: {overhead['fault_point_ns']:.0f} ns/site, "
+                f"recovery all-zero, attempts=1"))
     return rows
 
 
@@ -166,6 +225,7 @@ def main() -> None:
     worst = bench_cold_vs_warm()
     bench_queue_throughput()
     section = bench_verify_overhead()
+    bench_fault_free_overhead()
     if args.update:
         with open(args.update) as f:
             doc = json.load(f)

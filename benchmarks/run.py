@@ -12,6 +12,7 @@
   queue_sched_perf    → makespan-aware vs free-fabric fleet placement
   graph_replay_perf   → recorded-graph fused replay vs node-at-a-time
   jit_cache_perf      → verify_level off/fused/full build overhead
+  chaos_serving_perf  → seeded fault injection + device loss vs fault-free
 
 Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
 writes the same rows as machine-readable JSON (one object per row with
@@ -25,10 +26,11 @@ import argparse
 import json
 import sys
 
-from benchmarks import (graph_replay_perf, jit_cache_perf, model_step,
-                        overlay_exec_perf, par_time, persistent_cache_perf,
-                        queue_sched_perf, reconfig_time, replication_scaling,
-                        resource_table, roofline_report, template_build_perf)
+from benchmarks import (chaos_serving_perf, graph_replay_perf,
+                        jit_cache_perf, model_step, overlay_exec_perf,
+                        par_time, persistent_cache_perf, queue_sched_perf,
+                        reconfig_time, replication_scaling, resource_table,
+                        roofline_report, template_build_perf)
 
 SUITES = {
     "par_time": par_time.run,
@@ -43,6 +45,7 @@ SUITES = {
     "queue_sched_perf": queue_sched_perf.run,
     "graph_replay_perf": graph_replay_perf.run,
     "jit_cache_perf": jit_cache_perf.run,
+    "chaos_serving_perf": chaos_serving_perf.run,
 }
 
 

@@ -51,6 +51,7 @@ from pathlib import Path
 from typing import Callable, Iterable, Optional, Union
 
 from repro.core.dfg import DFG
+from repro.core.faults import fault_point
 from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
 
@@ -239,6 +240,10 @@ class DiskCache:
             self.misses += 1
             return None
         try:
+            # chaos boundary: an injected disk_read fault takes the same
+            # quarantine-and-miss path as real corruption — the degraded
+            # mode under test IS the existing resilience ladder
+            fault_point("disk_read", key)
             if blob[:4] != self.MAGIC or len(blob) < 10:
                 raise ValueError("bad magic")
             ver, klen = struct.unpack_from("<HI", blob, 4)
@@ -269,6 +274,9 @@ class DiskCache:
     def put(self, key: CacheKey, obj) -> None:
         tmp: Optional[Path] = None
         try:
+            # chaos boundary: an injected disk_write fault is swallowed into
+            # write_errors exactly like a full disk — serving never notices
+            fault_point("disk_write", key)
             payload = pickle.dumps(obj, protocol=4)
             kb = key.encode()
             blob = (self.MAGIC +

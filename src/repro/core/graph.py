@@ -297,6 +297,12 @@ class Partition:
         """Position of a node output among the fused kernel's outputs."""
         return self.outputs.index((nid, out_idx))
 
+    def ext_index(self) -> Dict[Tuple, int]:
+        """Buffer ref -> position among the fused kernel's external inputs.
+        The nodewise degradation ladder uses this to map a failed fused
+        partition's argument buffers back onto per-node wiring."""
+        return {tuple(ref): i for i, ref in enumerate(self.ext)}
+
 
 def _graph_consumers(graph: KernelGraph) -> Dict[Tuple[int, int], List[int]]:
     """(nid, out_idx) -> consuming nids, computed once per partitioning."""

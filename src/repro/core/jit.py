@@ -57,6 +57,7 @@ from repro.core import template as template_mod
 from repro.core.bitstream import Bitstream, generate
 from repro.core.cache import JITCache, make_cache_key, make_template_key
 from repro.core.dfg import DFG, optimize, trace
+from repro.core.faults import InjectedFault, fault_point
 from repro.core.fuse import FUGraph, to_fu_graph
 from repro.core.ir import compile_opencl_to_dfg, _lower_consts
 from repro.core.latency import LatencyAssignment, balance
@@ -241,6 +242,7 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     # even the parse+optimize pipeline
     t0 = time.perf_counter()
     g = lower_cached(kernel, n_inputs, name, cache=cache)
+    fault_point("frontend", g.name)
     times["frontend"] = (time.perf_counter() - t0) * 1e3
 
     if opts.verify_level != "off":
@@ -297,9 +299,20 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     tpl_out = None
     ttimes: Dict[str, float] = {}
     if opts.pr_mode in ("auto", "template"):
-        tpl_out = _template_par(fug, g, spec, plan, opts.seed,
-                                opts.place_effort, cache, opts.pr_mode,
-                                ttimes)
+        try:
+            tpl_out = _template_par(fug, g, spec, plan, opts.seed,
+                                    opts.place_effort, cache, opts.pr_mode,
+                                    ttimes)
+        except InjectedFault:
+            # degradation ladder, rung 1: an injected fault anywhere in the
+            # template path (single-replica place, strip route, stamp) is
+            # absorbed by falling back to the joint annealer — forced
+            # "template" mode propagates so the Session retry loop owns it
+            if opts.pr_mode == "template":
+                raise
+            from repro.core import recovery
+            recovery.note("fallback_joint")
+            tpl_out = None
 
     use_template = False
     if tpl_out is not None:
@@ -426,6 +439,7 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
     if built and tmpl.build_ms.get("scan", 0.0) > 0.0:
         times["template_scan"] = tmpl.build_ms["scan"]
     t0 = time.perf_counter()
+    fault_point("stamp", g.name)
     placement, routing, lat = template_mod.stamp(tmpl, spec, replicas)
     times["stamp"] = (time.perf_counter() - t0) * 1e3
     if replicas < plan.replicas:

@@ -66,6 +66,16 @@ class CompileOptions:
     # excluded from key_tail(): verified and unverified builds share cache
     # entries.
     verify_level: str = "off"
+    # self-healing knobs (repro.core.recovery): how many transient build
+    # failures (injected faults, device loss, I/O errors) the Session may
+    # absorb before the exception reaches the KernelFuture (None = the
+    # session RetryPolicy's default), and a wall-clock compile deadline
+    # after which a hedged rebuild at lower place_effort races the
+    # straggler.  Neither changes the produced artifact — a build that
+    # succeeds after 3 retries is bit-identical to one that succeeds first
+    # try — so both are excluded from key_tail() like verify_level.
+    retry_budget: Optional[int] = None
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.verify_level not in _VERIFY_LEVELS:
@@ -80,6 +90,12 @@ class CompileOptions:
         if self.max_partition_fus is not None and self.max_partition_fus < 1:
             raise ValueError(f"max_partition_fus must be >= 1, "
                              f"got {self.max_partition_fus!r}")
+        if self.retry_budget is not None and self.retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0, "
+                             f"got {self.retry_budget!r}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, "
+                             f"got {self.deadline_ms!r}")
 
     # ---------------------------------------------------------------- keying
     def key_tail(self) -> str:
@@ -94,9 +110,12 @@ class CompileOptions:
         as a different fused-DFG fingerprint.  ``verify_level`` is absent
         because verification never changes the artifact — a kernel built
         under ``"full"`` is byte-identical to one built under ``"off"``,
-        so both must hit the same cache entry.  The format matches the
-        pre-Session ad-hoc tuple byte for byte, so existing disk-cache
-        tiers stay warm across the API migration."""
+        so both must hit the same cache entry.  ``retry_budget`` and
+        ``deadline_ms`` are absent for the same reason: they steer *when a
+        build gives up*, never what it produces, and a kernel that needed a
+        retry must still warm the cache for callers with no retry budget.
+        The format matches the pre-Session ad-hoc tuple byte for byte, so
+        existing disk-cache tiers stay warm across the API migration."""
         return (f"{self.seed}:{self.place_effort:g}:{self.pr_mode}:"
                 f"{self.min_template_fill:g}")
 

@@ -25,6 +25,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import fault_point
 from repro.core.fuse import FUGraph
 from repro.core.overlay import Coord, OverlaySpec
 
@@ -51,6 +52,9 @@ def _nets(fug: FUGraph, replica: int):
 def place(fug: FUGraph, spec: OverlaySpec, replicas: int = 1,
           seed: int = 0, effort: float = 1.0) -> Placement:
     """Anneal all replicas jointly onto one overlay."""
+    # chaos boundary (repro.core.faults): keyed on the kernel name so plans
+    # can target e.g. only fused partitions (their names join with '+')
+    fault_point("place", fug.dfg.name)
     rng = random.Random(seed)
     n_fu_sites = spec.n_fus
     need_fu = fug.n_fus * replicas
@@ -221,6 +225,7 @@ def anneal_single(fug: FUGraph, tiles: Sequence[Coord],
     applies the steepest one.  Seeded random restarts (``effort`` many)
     replace the temperature schedule; deterministic given the seed.
     """
+    fault_point("place", fug.dfg.name)
     n_fu, n_in, n_out = fug.n_fus, fug.n_in, fug.n_out
     if n_fu > len(tiles):
         raise PlacementError(f"{n_fu} FUs > {len(tiles)} region tiles")

@@ -33,6 +33,8 @@ import hashlib
 import math
 from typing import List, Optional, Sequence, Tuple, TYPE_CHECKING
 
+from repro.core.faults import DeviceLostError, fault_point
+
 if TYPE_CHECKING:                                     # pragma: no cover
     from repro.core.runtime import Buffer, Context, Kernel
 
@@ -164,7 +166,17 @@ class CommandQueue:
                 f"kernel {kernel.program.compiled.name} was built on "
                 f"{kernel.program.ctx.device.name}, not this queue's "
                 f"{self.device.name}")
+        if self.device.failed:
+            # a lost device rejects new work before any side effect; the
+            # Session's healing loop migrates the program and re-routes
+            raise DeviceLostError(
+                f"device {self.device.name} is failed; cannot enqueue "
+                f"{kernel.program.compiled.name}")
         ck = kernel.program.compiled
+        # chaos boundaries sit BEFORE the kernel runs and the timeline is
+        # booked, so an injected submit/exec fault leaves no phantom busy
+        # interval behind and a retry starts clean
+        fault_point("queue_submit", ck.name)
         deps = tuple(wait_for)
         if self._fence is not None and self._fence not in deps:
             deps = deps + (self._fence,)
@@ -174,6 +186,7 @@ class CommandQueue:
         # run (and thereby validate) the kernel BEFORE booking the shared
         # timeline: a failed enqueue must not leave a phantom busy interval
         # or config switch behind
+        fault_point("device_exec", ck.name)
         outputs = kernel.enqueue(
             use_overlay_executor=self.use_overlay_executor)
 
@@ -211,6 +224,9 @@ class CommandQueue:
                    t_start_us=t_submit + config_us,
                    t_end_us=t_submit + dur,
                    status="complete", outputs=outputs, deps=deps)
+        # retained so the Session can re-enqueue this command elsewhere if
+        # the device is lost mid-trace (recovery: requeued_events)
+        ev._kernel = kernel
         self.events.append(ev)
         self._last_event = ev
         return ev

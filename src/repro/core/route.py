@@ -16,6 +16,7 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.faults import fault_point
 from repro.core.fuse import FUGraph
 from repro.core.overlay import Coord, OverlaySpec, RoutingGraph
 from repro.core.place import Placement
@@ -137,6 +138,7 @@ def route(fug: FUGraph, spec: OverlaySpec, placement: Placement,
     channel load that PathFinder must route around but may never rip up —
     the template gap-fill pass uses it to add remnant replicas to an
     already-routed fabric without disturbing the existing nets."""
+    fault_point("route", fug.dfg.name)
     if rg is None:
         rg = RoutingGraph(spec)
 

@@ -47,9 +47,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.cache import JITCache, kernel_fingerprint
+from repro.core.faults import DeviceLostError
 from repro.core.jit import CompiledKernel, jit_compile
 from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
+from repro.core.recovery import CircuitBreaker
 
 # modelled compile-time guess (µs) for a kernel the fleet has never built —
 # the order of a cold template build; refined per kernel by an EWMA of
@@ -74,6 +76,13 @@ class Device:
     # holds it, so the ledger contract is lock-NAME-based, not path-based
     fu_used: int = 0  # lock: any(lock)
     io_used: int = 0  # lock: any(lock)
+    # whole-device failure (card dropped off the bus, region went dark):
+    # a failed device rejects new queue submissions (DeviceLostError), is
+    # excluded from scheduler ranking, and its resident Programs are
+    # migrated by Scheduler.migrate_programs.  A single flag write either
+    # way, so fail()/recover() are safe from any thread
+    failed: bool = False
+    failed_at_us: Optional[float] = None   # modelled time of failure, if any
 
     @property
     def fu_free(self) -> int:
@@ -82,6 +91,20 @@ class Device:
     @property
     def io_free(self) -> int:
         return self.spec.n_io - self.io_used
+
+    # ------------------------------------------------------------- failure
+    def fail(self, at_us: Optional[float] = None) -> None:
+        """Mark the device lost (chaos harness / health monitor).  Takes
+        effect immediately: the next enqueue or build targeting it raises
+        :class:`~repro.core.faults.DeviceLostError`."""
+        self.failed = True
+        self.failed_at_us = at_us
+
+    def recover(self) -> None:
+        """Bring the device back (its breaker still half-opens first, so
+        returning traffic probes before it floods back)."""
+        self.failed = False
+        self.failed_at_us = None
 
     # ------------------------------------------------------------- ledger
     def debit(self, fus: int, io: int = 0) -> None:  # lock: held(lock)
@@ -196,6 +219,9 @@ class Context:
         Compile + debit happen under the context lock, so the headroom a
         build plans against cannot be invalidated mid-pipeline by a
         concurrent build or release on the same device."""
+        if self.device.failed:
+            raise DeviceLostError(
+                f"device {self.device.name} is failed; cannot build")
         if opts is None:
             warnings.warn(
                 "Context.build_program(source, n_inputs=..., ...) with "
@@ -426,6 +452,13 @@ class Scheduler:
         self._build_est: Dict[str, float] = {}  # lock: _est_lock
         self._est_lock = threading.Lock()
         self._lock = threading.RLock()
+        # per-device circuit breakers (repro.core.recovery): consecutive
+        # device-attributable failures open one, excluding the device from
+        # ranking until its cooldown half-opens it for probe traffic.  The
+        # dict itself is immutable after construction (keyed identically to
+        # contexts); each breaker is internally locked
+        self.breakers: Dict[str, CircuitBreaker] = {
+            d.name: CircuitBreaker() for d in devices}
         # guards against recursive rebalancing: shedding and re-inflation
         # both release() programs mid-flight, which must not re-trigger the
         # release hook (only ever read/written under the fleet lock)
@@ -441,6 +474,13 @@ class Scheduler:
         """Higher-priority tenants are shed last when the fleet is full."""
         with self._lock:
             self.priorities[tenant] = priority
+
+    def configure_breakers(self, threshold: int, cooldown_s: float) -> None:
+        """Re-arm every device breaker with the given policy (the Session
+        applies its RetryPolicy here at construction)."""
+        with self._lock:
+            self.breakers = {name: CircuitBreaker(threshold, cooldown_s)
+                             for name in self.contexts}
 
     def partition_spec(self) -> OverlaySpec:
         """The overlay geometry graph partitioning plans against: the
@@ -459,8 +499,16 @@ class Scheduler:
 
         ``exclude`` backs a build's OWN in-flight booking out of the
         ranking — otherwise the estimate a build posted for itself would
-        push that same build off its favoured device."""
-        ctxs = list(self.contexts.values())
+        push that same build off its favoured device.
+
+        Failed devices and devices whose breaker is open (still cooling
+        down) are excluded entirely; a device whose breaker is half-open or
+        mid-count ranks after every healthy one, so probe traffic reaches
+        it only when the healthy fleet is the worse choice or a probe is
+        due — on an all-healthy fleet the ranking is unchanged."""
+        ctxs = [c for c in self.contexts.values()
+                if not c.device.failed
+                and self.breakers[c.device.name].allows()]
         if self.policy == "free_fabric":
             return sorted(ctxs, key=lambda c: (c.device.fu_free,
                                                c.device.io_free),
@@ -470,7 +518,8 @@ class Scheduler:
             t = c.projected_makespan_us()
             if exclude is not None and c is exclude[0]:
                 t -= exclude[1]
-            return (t, -c.device.fu_free, -c.device.io_free)
+            return (0 if self.breakers[c.device.name].closed else 1,
+                    t, -c.device.fu_free, -c.device.io_free)
         return sorted(ctxs, key=key)
 
     # --------------------------------------------- in-flight compile model
@@ -496,7 +545,15 @@ class Scheduler:
         fleet lock — booking must not block behind a build that is holding
         it for a full pipeline run."""
         est = self.estimate_build_us(fingerprint)
-        ctx = self._ranked()[0]
+        ranked = self._ranked()
+        if ranked:
+            ctx = ranked[0]
+        else:
+            # every device failed or breaker-open: book against the least
+            # loaded anyway — the booking is advisory, and the build itself
+            # will fail (or a breaker will half-open) with a real error
+            ctx = min(self.contexts.values(),
+                      key=lambda c: c.projected_makespan_us())
         with self._est_lock:
             ctx.pending_compile_us += est
         return ctx, est
@@ -573,12 +630,27 @@ class Scheduler:
                     prog = ctx.build_program(source, opts=opts,
                                              tenant=tenant)
                     self._note_build_us(fp, prog.build_ms * 1e3)
+                    # a completed build is evidence the device is healthy:
+                    # resets the breaker's consecutive count, closes a
+                    # half-open breaker whose probe this was
+                    self.breakers[ctx.device.name].record_success()
                     return prog
                 except (PlacementError, RoutingError, LatencyError) as e:
+                    # genuine mapping failure: deterministic, NOT device
+                    # health — never counted against the breaker
                     last_err = e
                     self.cache.note_build_failure()
+                except DeviceLostError as e:
+                    # the device dropped between ranking and build: count
+                    # it and try the next candidate
+                    last_err = e
+                    self.breakers[ctx.device.name].record_failure()
             if not self._shed_one():
                 break
+        if not self._ranked(exclude=inflight):
+            raise SchedulerError(
+                f"no device available (fleet of {len(self.contexts)} all "
+                f"failed or breaker-open); last error: {last_err}")
         raise SchedulerError(
             f"kernel fits on no device (fleet of {len(self.contexts)}); "
             f"last error: {last_err}")
@@ -746,6 +818,75 @@ class Scheduler:
                 self._rebalancing = prev
                 if pending:
                     victim.release()
+
+    # ------------------------------------------------------------ migration
+    def migrate_programs(self, name: str) -> Tuple[int, int]:
+        """Evacuate every resident Program of device ``name`` (failed or
+        breaker-tripped) onto the healthy fleet, swapping each rebuilt
+        artifact into the owner's existing handle exactly like
+        :meth:`_resize` — handles tenants hold stay valid, now pointing at
+        a Program resident elsewhere.  Rebuilds go through the shared cache,
+        so a warm fleet migrates by re-stamp/disk-load, not full P&R.
+
+        Returns ``(migrated, lost)``; a program is lost when no healthy
+        device can host even one replica (it stays released — its fabric on
+        the dead device was already credited back, and the owner sees the
+        standard released-program error on next use).
+
+        Runs under the fleet lock with ``_rebalancing`` set, so release
+        hooks fired by our own administrative releases don't recurse into
+        re-inflation mid-migration."""
+        from repro.core.latency import LatencyError
+        from repro.core.place import PlacementError
+        from repro.core.route import RoutingError
+        with self._lock:
+            if name not in self.contexts:
+                raise ValueError(f"unknown device {name!r}")
+            src = self.contexts[name]
+            victims = list(src.programs)
+            prev = self._rebalancing
+            self._rebalancing = True
+            migrated = lost = 0
+            try:
+                for victim in victims:
+                    ctx = src
+                    with ctx.lock:
+                        if victim.released:
+                            continue
+                        victim.release()
+                        # that was OUR administrative release; True from
+                        # here on means the owner asked mid-migration
+                        victim.release_requested = False
+                    rebuilt: Optional[Program] = None
+                    for ctx in self._ranked():
+                        if ctx is src:
+                            continue
+                        try:
+                            rebuilt = ctx.build_program(
+                                victim.source, opts=victim.opts,
+                                tenant=victim.tenant)
+                            break
+                        except (PlacementError, RoutingError, LatencyError,
+                                DeviceLostError):
+                            continue
+                    if rebuilt is None:
+                        lost += 1
+                        continue
+                    ctx = rebuilt.ctx
+                    with ctx.lock:
+                        victim.compiled = rebuilt.compiled
+                        victim.build_ms = rebuilt.build_ms
+                        victim.ctx = ctx
+                        victim.released = False
+                        victim.grow_failed_free = None
+                        ctx.programs[ctx.programs.index(rebuilt)] = victim
+                        pending = victim.release_requested
+                    migrated += 1
+                    if pending:
+                        victim.release()
+            finally:
+                self._rebalancing = prev
+            return migrated, lost
 
     # ----------------------------------------------------------- inspection
     def ledger(self) -> Dict[str, Dict[str, int]]:

@@ -55,11 +55,15 @@ import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple, Union
 
+from repro.core import faults as faults_mod
+from repro.core import recovery as recovery_mod
 from repro.core.cache import JITCache, kernel_fingerprint, make_graph_key
+from repro.core.faults import DeviceLostError, FaultPlan, InjectedFault
 from repro.core.graph import (GraphError, KernelGraph, Partition,
                               partition_graph)
 from repro.core.options import CompileOptions
 from repro.core.queue import CommandQueue, Event, user_event
+from repro.core.recovery import RecoveryStats, RetryPolicy
 from repro.core.runtime import (Buffer, Context, Device, Platform,  # noqa: F401 — Device re-exported for Session users
                                 Program, Scheduler)
 
@@ -236,12 +240,25 @@ class Session:
                  persist_dir: Optional[str] = None,
                  max_workers: int = 4,
                  policy: str = "makespan",
-                 use_overlay_executor: bool = False):
+                 use_overlay_executor: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.scheduler = Scheduler(
             list(devices) if devices else Platform.default().devices,
             cache=cache, persist_dir=persist_dir, policy=policy)
         self.platform = Platform(list(self.scheduler.devices))
         self.use_overlay_executor = use_overlay_executor
+        # chaos + self-healing plane: the fault plan (if any) is activated
+        # thread-locally around every worker-pool build and every enqueue;
+        # the retry policy parameterizes backoff/hedging/breakers and the
+        # RecoveryStats blob surfaces in stats()["recovery"].  With no plan
+        # every fault_point is a single thread-local read — nothing on the
+        # fault-free hot path (gated in benchmarks/jit_cache_perf.py)
+        self.faults = faults
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.recovery = RecoveryStats()
+        self.scheduler.configure_breakers(self.retry.breaker_threshold,
+                                          self.retry.breaker_cooldown_s)
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="jit")
         # reentrant: a future that completes before its done-callback is
@@ -307,6 +324,15 @@ class Session:
             if self._closed:
                 raise SessionError("session is closed")
             entry = self._inflight.get(key)
+            if entry is not None and entry[0].done() \
+                    and entry[0].exception() is not None:
+                # the registered build already FAILED but its _forget
+                # callback hasn't run yet (it re-enters this lock): joining
+                # it would hand this caller a stale exception for a build
+                # it never asked for.  Treat the dead entry as absent and
+                # start a fresh build — the failed build's waiters all got
+                # the exception, and the cache was never poisoned
+                entry = None
             if entry is not None:
                 fut, record = entry
                 # the stats counter belongs to the cache's lock domain, not
@@ -314,7 +340,7 @@ class Session:
                 self.cache.note_singleflight()
             else:
                 record = dict(t_submit_us=self.now_us(), t_start_us=None,
-                              t_done_us=None)
+                              t_done_us=None, attempts=0)
                 booking = self.scheduler.book_inflight(fp)
                 fut = self._pool.submit(self._build, source, opts, tenant,
                                         fp, booking, record)
@@ -324,23 +350,122 @@ class Session:
         # _build's finally stamps t_done_us BEFORE the future resolves, so
         # callbacks (and joiners) always see it set
         if entry is None:
-            fut.add_done_callback(lambda _f, k=key: self._forget(k))
+            fut.add_done_callback(lambda _f, k=key, f=fut: self._forget(k, f))
         return KernelFuture(self, key, fut, record, tenant)
 
     def _build(self, source, opts: CompileOptions, tenant: Optional[str],
                fp: str, booking, record: Dict) -> Program:
+        """Worker-pool body: the retry loop around the scheduler build.
+
+        Transient failures (injected faults, device loss, I/O errors — see
+        ``recovery.TRANSIENT``) are absorbed with exponential backoff up to
+        the per-build budget (``opts.retry_budget``, else the session
+        policy's ``max_retries``); genuine mapping failures propagate
+        immediately — the same build would fail the same way.  The final
+        exception reaches every deduplicated waiter through the shared
+        future, and the finally-stamped ``t_done_us`` means retries and
+        backoff genuinely inflate the modelled compile event downstream
+        executions chain on."""
         record["t_start_us"] = self.now_us()
+        budget = opts.retry_budget if opts.retry_budget is not None \
+            else self.retry.max_retries
         try:
-            return self.scheduler.build_opts(source, opts, tenant=tenant,
-                                             inflight=booking,
-                                             fingerprint=fp)
+            with faults_mod.activate(self.faults), \
+                    recovery_mod.activate_stats(self.recovery):
+                attempt = 0
+                while True:
+                    record["attempts"] = attempt + 1
+                    try:
+                        if opts.deadline_ms is not None:
+                            return self._build_hedged(source, opts, tenant,
+                                                      booking, fp)
+                        return self.scheduler.build_opts(
+                            source, opts, tenant=tenant, inflight=booking,
+                            fingerprint=fp)
+                    except Exception as e:
+                        attempt += 1
+                        if attempt > budget or not self.retry.retryable(e):
+                            raise
+                        self.recovery.bump("retries")
+                        time.sleep(self.retry.backoff_s(attempt, key=fp))
         finally:
             record["t_done_us"] = self.now_us()
             self.scheduler.release_inflight(booking)
 
-    def _forget(self, key: Tuple) -> None:
+    def _build_hedged(self, source, opts: CompileOptions,
+                      tenant: Optional[str], booking, fp: str) -> Program:
+        """One build attempt under a compile deadline: the primary build
+        runs on its own thread; if it misses ``opts.deadline_ms`` a hedge
+        rebuild at lower ``place_effort`` races it and the first artifact
+        to land wins.  The straggler is never abandoned mid-ledger: each
+        racer always reports into the queue, and whichever Program loses
+        the race is released when it lands (hedges are full peer builds
+        with their own cache keys, so the winner's residency is unaffected).
+        """
+        import queue as _stdq
+        resq: "_stdq.SimpleQueue" = _stdq.SimpleQueue()
+        hedge_opts = opts.replace(
+            deadline_ms=None,
+            place_effort=max(0.05,
+                             opts.place_effort * self.retry.hedge_effort))
+        plan = faults_mod.active_plan()
+
+        def run(o: CompileOptions, tag: str) -> None:
+            with faults_mod.activate(plan), \
+                    recovery_mod.activate_stats(self.recovery):
+                try:
+                    resq.put((tag, self.scheduler.build_opts(
+                        source, o, tenant=tenant, inflight=booking,
+                        fingerprint=fp), None))
+                except BaseException as e:
+                    resq.put((tag, None, e))
+
+        threading.Thread(target=run, args=(opts, "primary"),
+                         name="jit-primary", daemon=True).start()
+        try:
+            first = resq.get(timeout=opts.deadline_ms * 1e-3)
+        except _stdq.Empty:
+            first = None
+        if first is None:
+            # deadline missed: race a cheaper rebuild against the straggler
+            self.recovery.bump("hedges_started")
+            threading.Thread(target=run, args=(hedge_opts, "hedge"),
+                             name="jit-hedge", daemon=True).start()
+            first = resq.get()
+            if first[1] is not None:
+                self.recovery.bump("hedges_won" if first[0] == "hedge"
+                                   else "hedges_lost")
+                threading.Thread(target=self._drain_hedge, args=(resq,),
+                                 name="jit-hedge-drain",
+                                 daemon=True).start()
+                return first[1]
+            # the first to land failed: the race reduces to the other racer
+            second = resq.get()
+            if second[1] is not None:
+                self.recovery.bump("hedges_won" if second[0] == "hedge"
+                                   else "hedges_lost")
+                return second[1]
+            raise (first[2] if first[0] == "primary" else second[2])
+        if first[2] is not None:
+            raise first[2]
+        return first[1]
+
+    @staticmethod
+    def _drain_hedge(resq) -> None:
+        """Release the losing racer's Program when it eventually lands —
+        without this a near-simultaneous finish would leak the loser's
+        fabric on the ledger forever."""
+        _tag, prog, _err = resq.get()
+        if prog is not None:
+            prog.release()
+
+    def _forget(self, key: Tuple, fut) -> None:
         with self._lock:
-            self._inflight.pop(key, None)
+            # identity-checked: a failed build's late callback must not pop
+            # the FRESH entry a subsequent compile() registered for the key
+            entry = self._inflight.get(key)
+            if entry is not None and entry[0] is fut:
+                self._inflight.pop(key)
 
     def build(self, source, opts: Optional[CompileOptions] = None,
               tenant: Optional[str] = None) -> Program:
@@ -394,9 +519,123 @@ class Session:
             prog = handle
             tenant = tenant if tenant is not None else prog.tenant
         bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in args]
-        q = self.queue_for(tenant, prog.ctx.device.name)
-        return q.enqueue_kernel(prog.create_kernel().set_args(*bufs),
-                                wait_for=deps, label=label)
+        return self._enqueue_resilient(prog, bufs, deps, tenant, label)
+
+    def _enqueue_resilient(self, prog: Program, bufs, deps,
+                           tenant: Optional[str],
+                           label: Optional[str]) -> Event:
+        """The execution-side healing loop.  Transient submit/exec faults
+        retry with backoff and count against the device's circuit breaker;
+        a breaker trip — or outright device loss — heals the device
+        (migrate resident Programs, re-enqueue lost events) and the retry
+        lands on wherever the program now lives.  The loop is bounded by
+        the enqueue retry budget plus one healing hop per device."""
+        attempts = hops = 0
+        while True:
+            dev = prog.ctx.device.name
+            q = self.queue_for(tenant, dev)
+            try:
+                with faults_mod.activate(self.faults):
+                    ev = q.enqueue_kernel(
+                        prog.create_kernel().set_args(*bufs),
+                        wait_for=deps, label=label)
+                # a completed command is health evidence: resets the
+                # breaker's consecutive count / closes a half-open probe
+                self.scheduler.breakers[dev].record_success()
+                return ev
+            except DeviceLostError:
+                hops += 1
+                if hops > len(self.contexts):
+                    raise        # every device in the fleet is gone
+                self._heal_device(dev)
+                if prog.released or prog.ctx.device.name == dev:
+                    raise        # migration could not re-seat the program
+            except InjectedFault:
+                attempts += 1
+                tripped = self.scheduler.breakers[dev].record_failure()
+                if tripped:
+                    # consecutive failures say the device is sick even
+                    # though it still answers: evacuate it and retry the
+                    # command where the program migrated to
+                    self._heal_device(dev)
+                    if prog.released or prog.ctx.device.name == dev:
+                        raise
+                    continue
+                if attempts > self.retry.enqueue_retries:
+                    raise
+                self.recovery.bump("enqueue_retries")
+                time.sleep(self.retry.backoff_s(attempts, key=dev))
+
+    # -------------------------------------------------------- device health
+    def fail_device(self, name: str, at_us: Optional[float] = None) -> None:
+        """Declare device ``name`` lost (chaos harness / health monitor)
+        and heal around it immediately: the breaker force-opens, resident
+        Programs migrate to the healthy fleet through the warm-cache
+        rebuild path, and — when ``at_us`` marks the modelled failure time
+        — commands that had not finished by then are re-executed on the
+        devices their programs migrated to, so no request observes lost
+        work."""
+        if name not in self.scheduler.contexts:
+            raise SessionError(f"unknown device {name!r}")
+        self.scheduler.contexts[name].device.fail(at_us=at_us)
+        self._heal_device(name)
+
+    def recover_device(self, name: str) -> None:
+        """Bring a failed device back.  Its breaker stays open until the
+        cooldown half-opens it, so returning traffic probes the device
+        before the scheduler trusts it again."""
+        if name not in self.scheduler.contexts:
+            raise SessionError(f"unknown device {name!r}")
+        self.scheduler.contexts[name].device.recover()
+
+    def _heal_device(self, name: str) -> None:
+        """Evacuate ``name``: force its breaker open, migrate resident
+        Programs (owners' handles stay valid, now resident elsewhere) and
+        re-enqueue the commands the failure interrupted."""
+        self.scheduler.breakers[name].force_open()
+        migrated, lost = self.scheduler.migrate_programs(name)
+        if migrated:
+            self.recovery.bump("migrated_programs", migrated)
+        if lost:
+            self.recovery.bump("lost_programs", lost)
+        self._requeue_events(name)
+
+    def _requeue_events(self, name: str) -> int:
+        """Re-execute commands stranded by a device failure: every event on
+        the dead device's queues whose modelled finish time is after the
+        failure instant re-runs — same kernel object, same argument buffers
+        — on whatever device its (already migrated) Program now lives.
+        The ORIGINAL Event object is re-pointed at the re-execution's
+        outputs and timestamps, so holders of the old handle transparently
+        observe the recovered result (bit-identical: the kernels are
+        deterministic functions of their argument buffers)."""
+        at = self.scheduler.contexts[name].device.failed_at_us
+        if at is None:
+            return 0
+        with self._lock:
+            doomed = [(k[0], q) for k, q in self._queues.items()
+                      if k[1] == name]
+        requeued = 0
+        for tenant, q in doomed:
+            for ev in q.events:
+                kern = getattr(ev, "_kernel", None)
+                if ev.t_end_us <= at or kern is None:
+                    continue
+                prog = kern.program
+                if prog.released or prog.ctx.device.name == name:
+                    continue       # not migrated; nothing to re-run on
+                nq = self.queue_for(tenant, prog.ctx.device.name)
+                nev = nq.enqueue_kernel(kern, wait_for=(),
+                                        label=ev.kernel_name)
+                ev.outputs = nev.outputs
+                ev.t_submit_us = nev.t_submit_us
+                ev.config_us = nev.config_us
+                ev.t_start_us = nev.t_start_us
+                ev.t_end_us = nev.t_end_us
+                requeued += 1
+        if requeued:
+            self.recovery.bump("requeued_events", requeued)
+        return requeued
 
     # ------------------------------------------------- graph capture/replay
     def capture(self, tenant: Optional[str] = None,
@@ -477,10 +716,74 @@ class Session:
         event edges on the per-tenant out-of-order queues (each partition
         execution also chains on its own compile event, Fig. 5 style).
         Returns one aggregate Event: ``wait()`` yields the graph outputs,
-        timestamps span the whole replay."""
+        timestamps span the whole replay.
+
+        Degradation ladder: a partition whose FUSED build failed (or whose
+        fused launch cannot be healed) is replayed node-by-node through
+        :meth:`_nodewise_partition_event` — per-node compiles are smaller,
+        independently cached and independently placeable, so the request
+        completes with identical results at per-node config cost for that
+        partition only (``recovery.fallback_nodewise`` counts these)."""
         tenant = tenant if tenant is not None else gexec.tenant
-        return self._replay(gexec.graph, gexec._steps, gexec._outs, inputs,
-                            tenant, f"graph:{gexec.graph.name}")
+        graph = gexec.graph
+        if len(inputs) != len(graph.inputs):
+            raise GraphError(
+                f"{graph.name}: expected {len(graph.inputs)} inputs, "
+                f"got {len(inputs)}")
+        bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in inputs]
+        events = []
+        for p, (fut, args, deps, label) in zip(gexec.partitions,
+                                               gexec._steps):
+            argv = [bufs[r[1]] if r[0] == "in" else
+                    events[r[1]].outputs[r[2]] for r in args]
+            dep_evs = tuple(events[d] for d in deps)
+            try:
+                events.append(self.enqueue(fut, *argv, wait_for=dep_evs,
+                                           tenant=tenant, label=label))
+                continue
+            except Exception:
+                # fused path dead for this partition (build failed after
+                # retries, or execution unhealable): degrade, don't fail
+                self.recovery.bump("fallback_nodewise")
+            events.append(self._nodewise_partition_event(
+                graph, p, argv, dep_evs, tenant, f"{label}:nodewise"))
+        outputs = tuple(events[si].outputs[pos] for si, pos in gexec._outs)
+        t_end = max(e.t_end_us for e in events)
+        return Event(kernel_name=f"graph:{graph.name}", t_queued_us=0.0,
+                     t_submit_us=t_end, t_start_us=t_end, t_end_us=t_end,
+                     status="complete", outputs=outputs, deps=tuple(events))
+
+    def _nodewise_partition_event(self, graph: KernelGraph, p: Partition,
+                                  argv, deps, tenant: Optional[str],
+                                  label: str) -> Event:
+        """Replay ONE partition node-by-node (the fused artifact is
+        unavailable): each member node compiles through the ordinary
+        cached/single-flight path and enqueues with the partition's
+        external argument buffers mapped back onto per-node wiring.  The
+        returned aggregate Event exposes outputs in the SAME order as the
+        fused kernel's, so downstream partitions consume it unchanged."""
+        by_nid = {n.nid: n for n in graph.nodes}
+        ext_pos = p.ext_index()
+        evs: Dict[int, Event] = {}
+        for nid in p.node_ids:     # node_ids are topological by construction
+            node = by_nid[nid]
+            nargs, ndeps = [], list(deps)
+            for b in node.args:
+                ref = b.ref()
+                if ref in ext_pos:
+                    nargs.append(argv[ext_pos[ref]])
+                else:              # internal edge: producer in this group
+                    nargs.append(evs[b.nid].outputs[b.out_idx])
+                    ndeps.append(evs[b.nid])
+            fut = self.compile(node.dfg, node.opts, tenant=tenant)
+            evs[nid] = self.enqueue(fut, *nargs, wait_for=tuple(ndeps),
+                                    tenant=tenant,
+                                    label=f"{label}/N{nid}[{node.dfg.name}]")
+        outs = tuple(evs[nid].outputs[oi] for nid, oi in p.outputs)
+        t_end = max(e.t_end_us for e in evs.values())
+        return Event(kernel_name=label, t_queued_us=0.0, t_submit_us=t_end,
+                     t_start_us=t_end, t_end_us=t_end, status="complete",
+                     outputs=outs, deps=tuple(evs.values()))
 
     def launch_nodewise(self, graph: KernelGraph, *inputs,
                         tenant: Optional[str] = None) -> Event:
@@ -600,13 +903,34 @@ class Session:
                     config_us=sum(q.config_us_total for q in queues))
 
     def stats(self) -> dict:
-        """One serving dashboard blob: cache tiers + per-device makespan."""
-        return dict(cache=self.cache.stats.as_dict(),
-                    devices=self.makespan_report(),
-                    inflight=len(self._inflight),
-                    queues=len(self._queues),
-                    graph_plans=len(self._graph_plans),
-                    config=self.config_charges())
+        """One serving dashboard blob: cache tiers, per-device makespan,
+        and the self-healing counters — retries, hedge outcomes, breaker
+        trips/states, fallback ladder hits, migrations — plus the disk
+        tier's quarantine/write-error counters (previously only reachable
+        via cache internals) and the fault plan's injection tallies when
+        chaos is on."""
+        recovery = self.recovery.as_dict()
+        recovery["breaker_trips"] = sum(
+            b.trips for b in self.scheduler.breakers.values())
+        recovery["breakers"] = {name: b.as_dict() for name, b
+                                in self.scheduler.breakers.items()}
+        out = dict(cache=self.cache.stats.as_dict(),
+                   devices=self.makespan_report(),
+                   inflight=len(self._inflight),
+                   queues=len(self._queues),
+                   graph_plans=len(self._graph_plans),
+                   config=self.config_charges(),
+                   recovery=recovery)
+        disk = self.cache.disk
+        if disk is not None:
+            out["disk"] = dict(hits=disk.hits, misses=disk.misses,
+                               writes=disk.writes,
+                               write_errors=disk.write_errors,
+                               quarantined=disk.quarantined,
+                               invalidated=disk.invalidated)
+        if self.faults is not None:
+            out["faults"] = self.faults.as_dict()
+        return out
 
     # ------------------------------------------------------------ lifecycle
     def close(self, wait: bool = True) -> None:
