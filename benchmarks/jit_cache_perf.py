@@ -12,7 +12,10 @@ Measures, for the paper's six-kernel suite:
      no verify stage at all, and "full" re-proves every artifact;
   4. fault-injection overhead (ISSUE 7): with no fault plan the recovery
      plane must cost nothing — ``fault_point`` is one thread-local read
-     and a fault-free serving loop books zero recovery work.
+     and a fault-free serving loop books zero recovery work;
+  5. remote-tier-disabled overhead (ISSUE 8): with no remote tier
+     attached the cache hot path books zero remote work and
+     ``Session.stats()`` carries no remote section.
 
     PYTHONPATH=src python benchmarks/jit_cache_perf.py \
         [--update BENCH_compile.json]
@@ -195,10 +198,56 @@ def bench_fault_free_overhead() -> Dict:
                 attempts=attempts)
 
 
+def bench_remote_disabled_overhead() -> Dict:
+    """ISSUE 8 gate: with no remote tier attached the hot path is
+    untouched — every remote consultation is behind one ``is not None``
+    check (the fault-plane TLS-gate pattern), so a host serving from
+    memory/disk alone does ZERO remote work.
+
+    Gates (raise → CI fail):
+      * a warm serving loop books zero remote counters on every tier
+        (artifact / template / frontend);
+      * ``Session.stats()`` has no ``remote`` section when none is
+        attached.
+    """
+    from repro.core.runtime import Device as _Device
+    from repro.core.session import Session
+
+    cache = JITCache()
+    src = BENCHMARKS["poly1"][0]
+    jit_compile(src, SPEC, cache=cache)          # cold build once
+    from repro.core.cache import make_cache_key
+    from repro.core.jit import lower_to_dfg
+    key = make_cache_key(lower_to_dfg(src, None, None, parse_source=True),
+                         SPEC, free_fus=SPEC.n_fus, free_io=SPEC.n_io,
+                         opts=CompileOptions())
+    n = 100_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        cache.get(key)
+    ns_per_hit = (time.perf_counter() - t0) / n * 1e9
+
+    stats = cache.stats.as_dict()
+    remote_counters = {k: v for k, v in stats.items()
+                       if k.startswith("remote")}
+    print(f"\nremote-disabled overhead: warm hit {ns_per_hit:.0f} ns "
+          f"(no remote tier), remote counters {remote_counters}")
+    if any(remote_counters.values()):
+        raise SystemExit(f"remote-disabled serving booked remote work: "
+                         f"{remote_counters}")
+    with Session([_Device("d", SPEC)]) as sess:
+        sess.compile(src, CompileOptions()).result(120)
+        if "remote" in sess.stats():
+            raise SystemExit("Session.stats() grew a remote section with "
+                             "no remote tier attached")
+    return dict(warm_hit_ns=ns_per_hit, remote_counters=remote_counters)
+
+
 def run() -> List[Dict]:
     """run.py harness entry: the verify-overhead table as CSV rows."""
     section = bench_verify_overhead()
     overhead = bench_fault_free_overhead()
+    remote = bench_remote_disabled_overhead()
     rows = [dict(name=f"verify/{r['name']}/{level}",
                  us_per_call=r[f"cold_ms_{level}"] * 1e3,
                  derived=f"verify {r[f'verify_ms_{level}']:.3f} ms")
@@ -213,6 +262,11 @@ def run() -> List[Dict]:
         us_per_call=overhead["fault_point_ns"] * 1e-3,
         derived=f"fault-free: {overhead['fault_point_ns']:.0f} ns/site, "
                 f"recovery all-zero, attempts=1"))
+    rows.append(dict(
+        name="remote/disabled_warm_hit_ns",
+        us_per_call=remote["warm_hit_ns"] * 1e-3,
+        derived=f"no remote tier: {remote['warm_hit_ns']:.0f} ns/warm hit, "
+                f"remote counters all-zero"))
     return rows
 
 
@@ -226,6 +280,7 @@ def main() -> None:
     bench_queue_throughput()
     section = bench_verify_overhead()
     bench_fault_free_overhead()
+    bench_remote_disabled_overhead()
     if args.update:
         with open(args.update) as f:
             doc = json.load(f)

@@ -9,7 +9,8 @@ Targets are either built-in suite names or paths:
                   race/alias analysis;
 * ``locklint``  — run the A3xx lock-discipline lint over the runtime
                   modules (``runtime.py``/``cache.py``/``session.py``/
-                  ``queue.py``);
+                  ``queue.py``/``faults.py``/``recovery.py``/
+                  ``remote.py``);
 * ``artifacts`` — JIT-compile the paper suite + model kernels and re-prove
                   every artifact's legality (A2xx); implied by
                   ``--verify``;

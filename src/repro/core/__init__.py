@@ -3,13 +3,16 @@
 # host framework. Add sibling subpackages for substrates.
 
 from repro.core.cache import JITCache, make_cache_key  # noqa: F401
-from repro.core.faults import (DeviceLostError, FaultPlan,  # noqa: F401
-                               FaultRule, InjectedFault)
+from repro.core.faults import (CorruptedFault, DeviceLostError,  # noqa: F401
+                               FaultPlan, FaultRule, InjectedFault)
 from repro.core.graph import KernelGraph, partition_graph  # noqa: F401
 from repro.core.jit import CompiledKernel, jit_compile  # noqa: F401
 from repro.core.options import CompileOptions  # noqa: F401
 from repro.core.overlay import OverlaySpec  # noqa: F401
 from repro.core.recovery import (CircuitBreaker, RecoveryStats,  # noqa: F401
                                  RetryPolicy)
+from repro.core.remote import (CompileFarm, RemoteBlobStore,  # noqa: F401
+                               RemoteCache, RemoteEndpoint,
+                               RemoteUnavailable)
 from repro.core.session import (GraphExec, KernelFuture,  # noqa: F401
                                 Session)

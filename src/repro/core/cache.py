@@ -187,15 +187,82 @@ def make_template_key(g: DFG, spec: OverlaySpec, seed: int = 0,
             f"{seed}:{place_effort:g}")
 
 
+# -------------------------------------------------------------- wire format
+
+# One checksummed frame for every blob tier — the disk store AND the
+# fleet-wide remote store (repro.core.remote) encode/decode through these
+# two functions, so an artifact written by any host's disk tier is
+# byte-compatible with the remote tier and vice versa:
+#
+#     MAGIC(4) | version(u16) | key_len(u32) | key | sha256(payload) | payload
+#
+# Decoding distinguishes *stale* (old schema version, embedded-key
+# mismatch: drop and rebuild) from *corrupt* (bad magic, truncation,
+# checksum mismatch, unpicklable payload: quarantine) — the two failure
+# classes every tier must treat differently.
+
+WIRE_MAGIC = b"OVJC"
+WIRE_VERSION = 1
+
+
+class WireStaleError(ValueError):
+    """The blob decoded cleanly but belongs to another schema version or
+    another key (filename/address collision): drop it and rebuild."""
+
+
+class WireCorruptError(ValueError):
+    """The blob is damaged (bad magic, truncation, checksum mismatch,
+    unpicklable payload): quarantine it — retrying the same bytes cannot
+    help, and the entry must never reach a healthy tier."""
+
+
+def encode_blob(key: CacheKey, obj,
+                version: int = WIRE_VERSION) -> bytes:
+    """Frame ``obj`` for any blob tier (see module wire-format comment)."""
+    payload = pickle.dumps(obj, protocol=4)
+    kb = key.encode()
+    return (WIRE_MAGIC + struct.pack("<HI", version, len(kb)) + kb +
+            hashlib.sha256(payload).digest() + payload)
+
+
+def decode_blob(key: CacheKey, blob: bytes,
+                version: int = WIRE_VERSION):
+    """Inverse of :func:`encode_blob`.  Raises :class:`WireStaleError` for
+    schema/key mismatches and :class:`WireCorruptError` for damage."""
+    try:
+        if blob[:4] != WIRE_MAGIC or len(blob) < 10:
+            raise WireCorruptError("bad magic")
+        ver, klen = struct.unpack_from("<HI", blob, 4)
+        off = 10
+        if len(blob) < off + klen + 32:
+            raise WireCorruptError("truncated header")
+        stored_key = blob[off:off + klen].decode()
+        off += klen
+        digest = blob[off:off + 32]
+        payload = blob[off + 32:]
+    except WireCorruptError:
+        raise
+    except Exception as e:
+        raise WireCorruptError(f"unreadable frame: {e}") from e
+    if ver != version or stored_key != key:
+        raise WireStaleError(f"version {ver} key {stored_key!r}")
+    if hashlib.sha256(payload).digest() != digest:
+        raise WireCorruptError("checksum mismatch")
+    try:
+        return pickle.loads(payload)
+    except Exception as e:
+        raise WireCorruptError(f"unpicklable payload: {e}") from e
+
+
 # --------------------------------------------------------------- disk tier
 
 class DiskCache:
     """Content-addressed on-disk artifact store (one file per cache key).
 
     Artifacts (``CompiledKernel``, ``Template`` — anything picklable) are
-    stored under ``root/<sha2>/<sha>.bin`` as::
-
-        MAGIC(4) | version(u16) | key_len(u32) | key | sha256(payload) | payload
+    stored under ``root/<sha2>/<sha>.bin`` framed by :func:`encode_blob` —
+    the same sha256-checksummed wire format the fleet-wide
+    :class:`~repro.core.remote.RemoteCache` speaks.
 
     Guarantees:
 
@@ -215,8 +282,8 @@ class DiskCache:
     a directory the serving user owns.
     """
 
-    MAGIC = b"OVJC"
-    SCHEMA_VERSION = 1
+    MAGIC = WIRE_MAGIC
+    SCHEMA_VERSION = WIRE_VERSION
 
     def __init__(self, root: Union[str, Path]):
         self.root = Path(root)
@@ -244,26 +311,14 @@ class DiskCache:
             # quarantine-and-miss path as real corruption — the degraded
             # mode under test IS the existing resilience ladder
             fault_point("disk_read", key)
-            if blob[:4] != self.MAGIC or len(blob) < 10:
-                raise ValueError("bad magic")
-            ver, klen = struct.unpack_from("<HI", blob, 4)
-            off = 10
-            if len(blob) < off + klen + 32:
-                raise ValueError("truncated header")
-            stored_key = blob[off:off + klen].decode()
-            off += klen
-            digest = blob[off:off + 32]
-            payload = blob[off + 32:]
-            if ver != self.SCHEMA_VERSION or stored_key != key:
-                # stale schema or filename collision: not corruption —
-                # drop the entry and recompile
-                self.invalidated += 1
-                p.unlink(missing_ok=True)
-                self.misses += 1
-                return None
-            if hashlib.sha256(payload).digest() != digest:
-                raise ValueError("checksum mismatch")
-            obj = pickle.loads(payload)
+            obj = decode_blob(key, blob, version=self.SCHEMA_VERSION)
+        except WireStaleError:
+            # stale schema or filename collision: not corruption —
+            # drop the entry and recompile
+            self.invalidated += 1
+            p.unlink(missing_ok=True)
+            self.misses += 1
+            return None
         except Exception:
             self._quarantine(p)
             self.misses += 1
@@ -277,11 +332,7 @@ class DiskCache:
             # chaos boundary: an injected disk_write fault is swallowed into
             # write_errors exactly like a full disk — serving never notices
             fault_point("disk_write", key)
-            payload = pickle.dumps(obj, protocol=4)
-            kb = key.encode()
-            blob = (self.MAGIC +
-                    struct.pack("<HI", self.SCHEMA_VERSION, len(kb)) + kb +
-                    hashlib.sha256(payload).digest() + payload)
+            blob = encode_blob(key, obj, version=self.SCHEMA_VERSION)
             p = self._path(key)
             p.parent.mkdir(parents=True, exist_ok=True)
             tmp = p.with_name(f"{p.name}.tmp{os.getpid()}")
@@ -331,6 +382,12 @@ class CacheStats:
     # mark that the artifact was warm-loaded from disk, not memory
     disk_hits: int = 0
     disk_template_hits: int = 0
+    # fleet tier: the artifact was fetched from the shared remote blob
+    # store (repro.core.remote) — some OTHER host (or the compile farm)
+    # paid the cold build
+    remote_hits: int = 0
+    remote_template_hits: int = 0
+    remote_frontend_hits: int = 0
     # Session single-flight: a compile request that joined an identical
     # in-flight build instead of starting its own pipeline run.  These never
     # reach get()/put(), so without the counter the dedup win is invisible
@@ -359,6 +416,9 @@ class CacheStats:
                     frontend_misses=self.frontend_misses,
                     disk_hits=self.disk_hits,
                     disk_template_hits=self.disk_template_hits,
+                    remote_hits=self.remote_hits,
+                    remote_template_hits=self.remote_template_hits,
+                    remote_frontend_hits=self.remote_frontend_hits,
                     singleflight_hits=self.singleflight_hits,
                     verify_quarantined=self.verify_quarantined,
                     hit_rate=round(self.hit_rate, 4))
@@ -383,10 +443,21 @@ class JITCache:
     lookup; a disk hit is promoted back into the LRU.  The disk tier is
     shared across processes (atomic writes), so a restarted server —
     or a sibling worker on the same host — warm-starts from it.
+
+    With ``remote`` (a :class:`~repro.core.remote.RemoteCache`) a third
+    tier sits below disk: memory → disk → remote.  A remote hit — an
+    artifact some OTHER host or the compile farm built — is promoted into
+    the LRU *and* written through to the local disk tier, so one fetch
+    warms every local tier.  Every local insertion is pushed to the remote
+    store best-effort (a dead remote never blocks a build), and the entire
+    remote plumbing is behind ``is not None`` checks: with no remote tier
+    the hot path is untouched (gated in ``benchmarks/jit_cache_perf.py``,
+    same pattern as the fault-plane TLS gate).
     """
 
     def __init__(self, capacity: int = 128, template_capacity: int = 64,
-                 persist_dir: Optional[Union[str, Path]] = None):
+                 persist_dir: Optional[Union[str, Path]] = None,
+                 remote=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if template_capacity < 1:
@@ -399,6 +470,10 @@ class JITCache:
         self._frontend_capacity = max(256, capacity)
         self.disk: Optional[DiskCache] = \
             DiskCache(persist_dir) if persist_dir is not None else None
+        # the fleet tier (repro.core.remote.RemoteCache); internally locked
+        # and fully fault-isolated, so it is consulted without widening this
+        # cache's lock contract
+        self.remote = remote
         self.stats = CacheStats()          # lock: _lock
         self._lock = threading.RLock()
 
@@ -419,8 +494,8 @@ class JITCache:
     # -------------------------------------------------------------- lookups
     def get(self, key: CacheKey):
         """Return the cached CompiledKernel or None; counts hit/miss and
-        refreshes recency on hit.  Falls back to (and promotes from) the
-        disk tier when one is configured."""
+        refreshes recency on hit.  Falls through (and promotes from) the
+        lower tiers when configured: memory → disk → remote."""
         with self._lock:
             entry = self._entries.get(key)
             if entry is None and self.disk is not None:
@@ -428,6 +503,16 @@ class JITCache:
                 if entry is not None:
                     self.stats.disk_hits += 1
                     self._insert(self._entries, key, entry, self.capacity)
+            if entry is None and self.remote is not None:
+                entry = self.remote.get(key)
+                if entry is not None:
+                    # one fetch warms every local tier: promote into the
+                    # LRU and persist to disk so a restart stays warm even
+                    # through a later remote outage
+                    self.stats.remote_hits += 1
+                    self._insert(self._entries, key, entry, self.capacity)
+                    if self.disk is not None:
+                        self.disk.put(key, entry)
             if entry is None:
                 self.stats.misses += 1
                 return None
@@ -441,6 +526,8 @@ class JITCache:
             self.stats.insertions += 1
             if self.disk is not None:
                 self.disk.put(key, ck)
+            if self.remote is not None:
+                self.remote.put(key, ck)
 
     def note_build_failure(self) -> None:
         """Count a miss whose compile then failed to place/route (e.g. a
@@ -468,6 +555,8 @@ class JITCache:
             self.stats.verify_quarantined += 1
             if self.disk is not None:
                 self.disk._quarantine(self.disk._path(key))
+            if self.remote is not None:
+                self.remote.quarantine(key)
 
     def _insert(self, table, key: CacheKey, obj, capacity: int) -> None:  # lock: held(_lock)
         table[key] = obj
@@ -491,6 +580,14 @@ class JITCache:
                     self.stats.disk_template_hits += 1
                     self._insert(self._templates, key, entry,
                                  self.template_capacity)
+            if entry is None and self.remote is not None:
+                entry = self.remote.get(key)
+                if entry is not None:
+                    self.stats.remote_template_hits += 1
+                    self._insert(self._templates, key, entry,
+                                 self.template_capacity)
+                    if self.disk is not None:
+                        self.disk.put(key, entry)
             if entry is None:
                 self.stats.template_misses += 1
                 return None
@@ -503,6 +600,8 @@ class JITCache:
             self._insert(self._templates, key, tmpl, self.template_capacity)
             if self.disk is not None:
                 self.disk.put(key, tmpl)
+            if self.remote is not None:
+                self.remote.put(key, tmpl)
 
     # ------------------------------------------------------------- frontend
     def get_frontend(self, key: CacheKey):
@@ -518,6 +617,14 @@ class JITCache:
                 if g is not None:
                     self._insert(self._frontends, key, g,
                                  self._frontend_capacity)
+            if g is None and self.remote is not None:
+                g = self.remote.get(key)
+                if g is not None:
+                    self.stats.remote_frontend_hits += 1
+                    self._insert(self._frontends, key, g,
+                                 self._frontend_capacity)
+                    if self.disk is not None:
+                        self.disk.put(key, g)
             if g is None:
                 self.stats.frontend_misses += 1
                 return None
@@ -530,6 +637,8 @@ class JITCache:
             self._insert(self._frontends, key, g, self._frontend_capacity)
             if self.disk is not None:
                 self.disk.put(key, g)
+            if self.remote is not None:
+                self.remote.put(key, g)
 
     def clear(self) -> None:
         """Drop the in-memory tiers (the disk tier, if any, is retained —

@@ -19,13 +19,22 @@ boundary the failure models:
   * ``stamp``        — template stamping (:func:`repro.core.jit._template_par`);
   * ``disk_read`` /
     ``disk_write``   — the persistent tier (:class:`~repro.core.cache.DiskCache`);
+  * ``remote_read`` /
+    ``remote_write`` — the fleet-wide blob tier
+                       (:class:`~repro.core.remote.RemoteCache`);
+  * ``farm_rpc``     — compile-farm push/prefetch RPCs
+                       (:class:`~repro.core.remote.CompileFarm`);
   * ``queue_submit`` — command-queue admission (:mod:`repro.core.queue`);
   * ``device_exec``  — kernel execution on the overlay engine.
 
-Two fault kinds: ``"error"`` raises :class:`InjectedFault` at the site
+Three fault kinds: ``"error"`` raises :class:`InjectedFault` at the site
 (a transient failure the self-healing layer in :mod:`repro.core.recovery`
 must absorb), ``"slow"`` sleeps ``slow_us`` of real wall time (a straggler
-build — what compile deadlines and hedged rebuilds race against).
+build — what compile deadlines and hedged rebuilds race against), and
+``"corrupt"`` raises :class:`CorruptedFault` — the blob-tier read paths
+(disk and remote) interpret it as a torn/bit-flipped payload and walk
+their checksum-quarantine path instead of the retry path, exactly as a
+real checksum mismatch would.
 
 Whole-device failure is modelled on the Device itself
 (:meth:`~repro.core.runtime.Device.fail` /
@@ -49,15 +58,23 @@ import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 STAGES = ("frontend", "place", "route", "stamp", "disk_read", "disk_write",
+          "remote_read", "remote_write", "farm_rpc",
           "queue_submit", "device_exec")
 
-FAULT_KINDS = ("error", "slow")
+FAULT_KINDS = ("error", "slow", "corrupt")
 
 
 class InjectedFault(RuntimeError):
     """A failure injected by a :class:`FaultPlan` — transient by contract:
     the recovery layer retries/falls back instead of propagating it to the
     tenant whenever a budget remains."""
+
+
+class CorruptedFault(InjectedFault):
+    """An injected *payload corruption* (torn write, bit flip, partial
+    read).  Unlike a plain :class:`InjectedFault` the right response is not
+    a retry of the same bytes — the blob tiers quarantine the entry and
+    report a miss, exactly like a real checksum mismatch."""
 
 
 class DeviceLostError(RuntimeError):
@@ -73,7 +90,7 @@ class FaultRule:
     stage: str
     rate: float = 1.0
     times: Optional[int] = None
-    kind: str = "error"              # error | slow
+    kind: str = "error"              # error | slow | corrupt
     slow_us: float = 0.0             # wall-clock inflation for kind="slow"
     match: Optional[str] = None      # substring filter on the site key
 
@@ -148,6 +165,7 @@ class FaultPlan:
         (seed, stage, key, visit index)."""
         sleep_us = 0.0
         boom: Optional[str] = None
+        boom_cls = InjectedFault
         with self._lock:
             self.visits_total += 1
             n = self._visits.get((stage, key), 0)
@@ -168,15 +186,18 @@ class FaultPlan:
                     sleep_us += rule.slow_us
                 else:
                     self.injected[stage] = self.injected.get(stage, 0) + 1
-                    boom = f"injected fault at {stage}" + \
+                    noun = "corruption" if rule.kind == "corrupt" else "fault"
+                    boom = f"injected {noun} at {stage}" + \
                         (f" ({key})" if key else "")
+                    if rule.kind == "corrupt":
+                        boom_cls = CorruptedFault
                 break
         # side effects OUTSIDE the lock: a slow fault must not serialize
         # every other site's decisions behind its sleep
         if sleep_us > 0.0:
             time.sleep(sleep_us * 1e-6)
         if boom is not None:
-            raise InjectedFault(boom)
+            raise boom_cls(boom)
 
     # -------------------------------------------------------- observability
     def as_dict(self) -> dict:

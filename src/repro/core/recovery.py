@@ -14,7 +14,8 @@ paths and the Scheduler's ranking/migration — but the *policy* and the
     attempt at lower ``place_effort`` — replicas are ~1 ms re-stamps, so a
     cheaper P&R is the natural straggler hedge);
   * :class:`CircuitBreaker` — the classic closed → open → half-open state
-    machine, one per device: ``threshold`` consecutive device-attributable
+    machine, one per device (and one per remote endpoint in
+    :mod:`repro.core.remote`): ``threshold`` consecutive device-attributable
     failures open it (the scheduler then excludes the device from the
     ``projected_makespan_us`` ranking), after ``cooldown_s`` it half-opens
     and probe builds are allowed back; a probe success closes it, a probe
@@ -41,7 +42,10 @@ from repro.core.faults import DeviceLostError, InjectedFault
 
 #: exception classes the retry loop treats as transient.  Genuine mapping
 #: failures (PlacementError and friends: the kernel does not fit) are NOT
-#: retryable — the same build would fail the same way.
+#: retryable — the same build would fail the same way.  OSError covers the
+#: I/O tiers: disk faults AND the remote tier's RemoteUnavailable
+#: (repro.core.remote subclasses it on purpose), so endpoint loss and
+#: farm-RPC drops are retryable without this module importing remote.
 TRANSIENT = (InjectedFault, DeviceLostError, OSError)
 
 

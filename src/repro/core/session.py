@@ -242,10 +242,17 @@ class Session:
                  policy: str = "makespan",
                  use_overlay_executor: bool = False,
                  faults: Optional[FaultPlan] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 remote=None):
         self.scheduler = Scheduler(
             list(devices) if devices else Platform.default().devices,
             cache=cache, persist_dir=persist_dir, policy=policy)
+        if remote is not None:
+            # fleet blob tier (repro.core.remote.RemoteCache): attach as the
+            # JITCache's third level (memory → disk → remote).  Duck-typed
+            # and internally fault-isolated — a dead remote degrades every
+            # lookup to the local tiers, never fails a build
+            self.scheduler.cache.remote = remote
         self.platform = Platform(list(self.scheduler.devices))
         self.use_overlay_executor = use_overlay_executor
         # chaos + self-healing plane: the fault plan (if any) is activated
@@ -907,8 +914,9 @@ class Session:
         and the self-healing counters — retries, hedge outcomes, breaker
         trips/states, fallback ladder hits, migrations — plus the disk
         tier's quarantine/write-error counters (previously only reachable
-        via cache internals) and the fault plan's injection tallies when
-        chaos is on."""
+        via cache internals), the fleet remote tier's dashboard when one
+        is attached, and the fault plan's injection tallies when chaos is
+        on."""
         recovery = self.recovery.as_dict()
         recovery["breaker_trips"] = sum(
             b.trips for b in self.scheduler.breakers.values())
@@ -928,6 +936,11 @@ class Session:
                                write_errors=disk.write_errors,
                                quarantined=disk.quarantined,
                                invalidated=disk.invalidated)
+        remote = self.cache.remote
+        if remote is not None:
+            # fleet tier dashboard: hit/miss/quarantine counters, fetch-µs
+            # EWMA, hedge outcomes and per-endpoint breaker states
+            out["remote"] = remote.stats_dict()
         if self.faults is not None:
             out["faults"] = self.faults.as_dict()
         return out

@@ -58,7 +58,7 @@ def test_fault_rule_validation():
         FaultRule("place", kind="slow")          # slow needs slow_us > 0
     with pytest.raises(dataclasses.FrozenInstanceError):
         FaultRule("place").rate = 0.5
-    assert set(FAULT_KINDS) == {"error", "slow"}
+    assert set(FAULT_KINDS) == {"error", "slow", "corrupt"}
 
 
 def test_fault_plan_is_deterministic_in_seed_and_visit_order():

@@ -1,0 +1,374 @@
+"""Fleet-wide remote cache tier & compile farm (ISSUE 8): wire-format
+compatibility, cross-host warm start, checksum quarantine (never poisoning
+local tiers), hedged fetch vs local rebuild, degradation ladder
+remote → disk → cold build, injected network faults, farm prefetch, and
+the Session's remote stats section."""
+
+import pytest
+
+from repro.configs.paper_suite import BENCHMARKS
+from repro.core import faults as faults_mod
+from repro.core.cache import (JITCache, WireCorruptError, WireStaleError,
+                              decode_blob, encode_blob)
+from repro.core.faults import FaultPlan
+from repro.core.jit import jit_compile
+from repro.core.options import CompileOptions
+from repro.core.overlay import OverlaySpec
+from repro.core.recovery import TRANSIENT, RetryPolicy
+from repro.core.remote import (CompileFarm, RemoteBlobStore, RemoteCache,
+                               RemoteEndpoint, RemoteUnavailable)
+from repro.core.runtime import Device
+from repro.core.session import Session
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+POLY1 = BENCHMARKS["poly1"][0]
+OPTS = CompileOptions(max_replicas=4)
+
+#: breakers that stay open once tripped — outage tests must not depend on
+#: wall-clock cooldowns half-opening mid-assert
+STICKY = RetryPolicy(breaker_cooldown_s=60.0)
+
+
+def fleet(n_endpoints=1, **ep_kw):
+    store = RemoteBlobStore()
+    eps = [RemoteEndpoint(store, f"r{i}", **ep_kw) for i in range(n_endpoints)]
+    return store, RemoteCache(eps, retry=STICKY)
+
+
+# -------------------------------------------------------------- wire format
+
+def test_wire_format_round_trip_and_failure_classes():
+    blob = encode_blob("k1", {"a": 1})
+    assert decode_blob("k1", blob) == {"a": 1}
+    # damage → corrupt (quarantine class)
+    torn = blob[:-3]
+    with pytest.raises(WireCorruptError):
+        decode_blob("k1", torn)
+    flipped = bytearray(blob)
+    flipped[-1] ^= 0xFF
+    with pytest.raises(WireCorruptError):
+        decode_blob("k1", bytes(flipped))
+    with pytest.raises(WireCorruptError):
+        decode_blob("k1", b"JUNK" + blob[4:])
+    # staleness → drop-and-rebuild class (schema version, key mismatch)
+    with pytest.raises(WireStaleError):
+        decode_blob("k1", encode_blob("k1", 1, version=99))
+    with pytest.raises(WireStaleError):
+        decode_blob("other-key", blob)
+
+
+def test_disk_and_remote_share_one_wire_format(tmp_path):
+    """A blob from the disk tier's files decodes through the same codec the
+    remote store serves — one frame, every tier."""
+    cache = JITCache(persist_dir=tmp_path)
+    cold = jit_compile(POLY1, SPEC, opts=OPTS, cache=cache)
+    paths = sorted(tmp_path.glob("*/*.bin"))
+    assert paths
+    store, rc = fleet()
+    # re-home the raw disk file bytes into the remote store: a reader keyed
+    # correctly gets the identical artifact back
+    key = next(iter(cache.keys()))
+    store.write(RemoteBlobStore.addr(key), cache.disk._path(key).read_bytes())
+    got = rc.get(key)
+    assert got is not None
+    assert got.bitstream.sha256() == cold.bitstream.sha256()
+
+
+# -------------------------------------------------------- cross-host warm start
+
+def test_second_host_warm_starts_from_remote():
+    store, rc = fleet()
+    host_a = JITCache(remote=rc)
+    cold = jit_compile(POLY1, SPEC, opts=OPTS, cache=host_a)
+    assert len(store) >= 1                      # write-through pushed fleet-wide
+
+    host_b = JITCache(remote=rc)                # fresh host, empty local tiers
+    warm = jit_compile(POLY1, SPEC, opts=OPTS, cache=host_b)
+    assert host_b.stats.remote_hits == 1
+    assert host_b.stats.misses == 0             # zero cold compiles
+    assert warm.bitstream.sha256() == cold.bitstream.sha256()
+    assert warm.program.content_hash() == cold.program.content_hash()
+    assert warm.placement.fu_pos == cold.placement.fu_pos
+
+
+def test_remote_hit_warms_local_disk_tier(tmp_path):
+    """One remote fetch leaves the artifact on local disk: a restart stays
+    warm even through a later total remote outage."""
+    store, rc = fleet()
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+
+    host = JITCache(persist_dir=tmp_path, remote=rc)
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=host)
+    assert host.stats.remote_hits == 1
+
+    for ep in rc.endpoints:                     # fleet store goes dark...
+        ep.fail()
+    restarted = JITCache(persist_dir=tmp_path, remote=rc)
+    ck = jit_compile(POLY1, SPEC, opts=OPTS, cache=restarted)
+    assert restarted.stats.disk_hits >= 1       # ...but the host stays warm
+    assert restarted.stats.misses == 0
+    assert ck.plan.replicas == OPTS.max_replicas
+
+
+def test_cross_host_key_compatibility_different_snapshots():
+    """ISSUE 8 satellite: two hosts with DIFFERENT free-fabric snapshots
+    normalize to the same replication plan, hence the same remote key —
+    host B warm-hits host A's artifact bit-identically."""
+    store, rc = fleet()
+    opts = CompileOptions(max_replicas=2)       # the cap binds the plan
+    host_a = JITCache(remote=rc)
+    cold = jit_compile(POLY1, SPEC, opts=opts, cache=host_a)
+
+    host_b = JITCache(remote=rc)
+    warm = jit_compile(POLY1, SPEC, opts=opts, cache=host_b,
+                       fu_headroom=3, io_headroom=1)   # busier fabric
+    assert host_b.stats.remote_hits == 1
+    assert host_b.stats.misses == 0
+    assert warm.bitstream.sha256() == cold.bitstream.sha256()
+    assert warm.program.content_hash() == cold.program.content_hash()
+
+
+# ---------------------------------------------------------------- quarantine
+
+def test_corrupt_remote_blob_quarantined_never_poisons_local(tmp_path):
+    """Regression: a corrupt remote entry is a MISS — quarantined from the
+    store and never written into the local memory/disk tiers."""
+    store, rc = fleet()
+    cold = jit_compile(POLY1, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+    for addr in list(store._blobs):             # flip a byte in every blob
+        assert store.corrupt(addr)
+
+    host = JITCache(persist_dir=tmp_path, remote=rc)
+    ck = jit_compile(POLY1, SPEC, opts=OPTS, cache=host)
+    assert ck.bitstream.sha256() == cold.bitstream.sha256()  # rebuilt clean
+    assert host.stats.remote_hits == 0
+    assert rc.stats.get("quarantined") >= 1
+    assert rc.stats.get("hits") == 0
+    # the local tiers only ever held the clean REBUILT artifact: a fresh
+    # host over the same disk dir warm-hits and the artifact verifies
+    again = JITCache(persist_dir=tmp_path)
+    warm = jit_compile(POLY1, SPEC, opts=OPTS, cache=again)
+    assert again.stats.disk_hits == 1
+    assert again.disk.quarantined == 0
+    assert warm.bitstream.sha256() == cold.bitstream.sha256()
+    # ...and the corrupt blobs are gone from the fleet store (the rebuild
+    # re-pushed clean ones through write-through)
+    fresh = JITCache(remote=rc)
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=fresh)
+    assert fresh.stats.remote_hits == 1
+
+
+def test_stale_remote_blob_invalidated_not_quarantined():
+    store, rc = fleet()
+    key = "some-key"
+    store.write(RemoteBlobStore.addr(key),
+                encode_blob(key, {"v": 1}, version=99))
+    assert rc.get(key) is None
+    assert rc.stats.get("invalidated") == 1
+    assert rc.stats.get("quarantined") == 0
+    assert len(store) == 0                      # dropped, rebuildable
+
+
+# ------------------------------------------------------------ failure ladder
+
+def test_total_outage_degrades_to_cold_build_zero_failures():
+    """The ladder's last rung: every endpoint down → every lookup is a
+    miss, every build completes locally, nothing raises."""
+    store, rc = fleet(n_endpoints=2)
+    warm_src = BENCHMARKS["chebyshev"][0]
+    jit_compile(warm_src, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+    for ep in rc.endpoints:
+        ep.fail()
+    host = JITCache(remote=rc)
+    ck = jit_compile(warm_src, SPEC, opts=OPTS, cache=host)   # no raise
+    assert ck.plan.replicas == OPTS.max_replicas
+    assert host.stats.remote_hits == 0
+    assert rc.stats.get("degraded") >= 1
+    assert rc.stats.get("write_errors") >= 1    # pushes swallowed, not raised
+    # breakers opened; the tier reports the outage
+    assert rc.total_outage() or any(
+        not b.closed for b in rc.breakers.values())
+
+    for ep in rc.endpoints:                     # network heals
+        ep.recover()
+    for b in rc.breakers.values():              # cooldown elapses (sticky
+        b.record_success()                      # policy: close by evidence)
+        b.state = "closed"
+    fresh = JITCache(remote=rc)
+    jit_compile(warm_src, SPEC, opts=OPTS, cache=fresh)
+    assert fresh.stats.remote_hits == 1         # warm start resumes
+
+
+def test_lossy_endpoint_retries_across_endpoints():
+    """A read lost on one endpoint lands on the next; the loss counts
+    against the first endpoint's breaker only."""
+    store = RemoteBlobStore()
+    flaky = RemoteEndpoint(store, "flaky", loss_rate=0.999, seed=3)
+    solid = RemoteEndpoint(store, "solid")
+    rc = RemoteCache([flaky, solid], retry=STICKY)
+    key = "k"
+    store.write(RemoteBlobStore.addr(key), encode_blob(key, [1, 2, 3]))
+    assert rc.get(key) == [1, 2, 3]
+    assert rc.stats.get("hits") == 1
+    assert rc.stats.get("read_errors") >= 1
+    assert rc.breakers["solid"].closed
+
+
+def test_remote_unavailable_is_transient():
+    assert issubclass(RemoteUnavailable, OSError)
+    assert isinstance(RemoteUnavailable("x"), TRANSIENT)
+
+
+# ------------------------------------------------------------- hedged fetch
+
+def test_hedged_fetch_local_rebuild_wins():
+    """A straggler fetch past the deadline loses the modelled race to a
+    fast local rebuild: reported as a miss, counted as a hedge win."""
+    store = RemoteBlobStore()
+    slow = RemoteEndpoint(store, "slow", latency_us=1_000_000.0, jitter=0.0)
+    rc = RemoteCache([slow], hedge_deadline_us=10_000.0,
+                     rebuild_est_us=5_000.0, retry=STICKY)
+    key = "k"
+    store.write(RemoteBlobStore.addr(key), encode_blob(key, "artifact"))
+    assert rc.get(key) is None
+    assert rc.stats.get("hedges_started") == 1
+    assert rc.stats.get("hedges_won") == 1
+    assert rc.stats.get("misses") == 1
+
+
+def test_hedged_fetch_remote_still_wins_slow_rebuild():
+    """Same straggler fetch, but the local rebuild is slower than waiting:
+    the fetch is kept (hit), the hedge counted as lost."""
+    store = RemoteBlobStore()
+    slow = RemoteEndpoint(store, "slow", latency_us=30_000.0, jitter=0.0)
+    rc = RemoteCache([slow], hedge_deadline_us=10_000.0,
+                     rebuild_est_us=500_000.0, retry=STICKY)
+    key = "k"
+    store.write(RemoteBlobStore.addr(key), encode_blob(key, "artifact"))
+    assert rc.get(key) == "artifact"
+    assert rc.stats.get("hedges_started") == 1
+    assert rc.stats.get("hedges_lost") == 1
+    # a per-call rebuild estimate (the caller's measured build EWMA) can
+    # flip the same race the other way
+    assert rc.get(key, rebuild_est_us=1_000.0) is None
+    assert rc.stats.get("hedges_won") == 1
+
+
+# ---------------------------------------------------------- injected faults
+
+def test_injected_remote_read_faults_degrade_to_miss():
+    store, rc = fleet()
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+    plan = FaultPlan(seed=5).add("remote_read", rate=1.0)
+    host = JITCache(remote=rc)
+    with faults_mod.activate(plan):
+        ck = jit_compile(POLY1, SPEC, opts=OPTS, cache=host)   # no raise
+    assert ck.plan.replicas == OPTS.max_replicas
+    assert host.stats.remote_hits == 0
+    assert plan.injected.get("remote_read", 0) >= 1
+    assert rc.stats.get("read_errors") >= 1
+
+
+def test_injected_corruption_walks_quarantine_path():
+    """kind='corrupt' at remote_read is a torn payload, not an endpoint
+    failure: quarantined (store entry deleted), no retry, no breaker hit."""
+    store, rc = fleet()
+    key = "k"
+    store.write(RemoteBlobStore.addr(key), encode_blob(key, 42))
+    plan = FaultPlan(seed=1).add("remote_read", kind="corrupt", times=1)
+    with faults_mod.activate(plan):
+        assert rc.get(key) is None
+    assert rc.stats.get("quarantined") == 1
+    assert rc.stats.get("read_errors") == 0
+    assert len(store) == 0
+    assert rc.breakers["r0"].closed
+
+
+def test_injected_remote_write_faults_are_swallowed():
+    store, rc = fleet()
+    plan = FaultPlan(seed=2).add("remote_write", rate=1.0)
+    with faults_mod.activate(plan):
+        jit_compile(POLY1, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+    assert rc.stats.get("write_errors") >= 1
+    assert len(store) == 0                      # nothing pushed
+
+
+def test_new_fault_stages_registered():
+    for stage in ("remote_read", "remote_write", "farm_rpc"):
+        FaultPlan().add(stage)                  # no ValueError
+
+
+# ------------------------------------------------------------------ the farm
+
+def test_farm_prefetch_gives_fresh_host_zero_cold_compiles():
+    store, rc = fleet()
+    farm = CompileFarm(SPEC, rc)
+    hot_opts = CompileOptions(max_replicas=4)
+    for _ in range(3):
+        farm.observe(POLY1, hot_opts)
+    farm.observe(BENCHMARKS["chebyshev"][0], hot_opts)
+    pairs = farm.hot(top_n=2)
+    assert pairs[0][1] == hot_opts and pairs[0][0] == POLY1  # hottest first
+    assert farm.prefetch_hot(top_n=2) == 2
+    assert farm.stats_dict()["built"] == 2
+
+    fresh = JITCache(remote=rc)                 # a brand-new serving host
+    ck = jit_compile(POLY1, SPEC, opts=hot_opts, cache=fresh)
+    ck2 = jit_compile(BENCHMARKS["chebyshev"][0], SPEC, opts=hot_opts,
+                      cache=fresh)
+    assert fresh.stats.misses == 0              # zero cold compiles
+    assert fresh.stats.remote_hits == 2
+    assert ck.plan.replicas == 4 and ck2.plan.replicas == 4
+
+
+def test_farm_rpc_fault_budget_exhaustion_skips_pair():
+    store, rc = fleet()
+    farm = CompileFarm(SPEC, rc, retry=RetryPolicy(max_retries=1))
+    plan = FaultPlan(seed=9).add("farm_rpc", rate=1.0)
+    with faults_mod.activate(plan):
+        assert farm.prefetch([(POLY1, OPTS)]) == 0
+    assert farm.stats_dict()["push_failures"] == 1
+    # degraded coverage, not broken serving: the pair cold-compiles on
+    # first demand and still lands fleet-wide via write-through
+    host = JITCache(remote=rc)
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=host)
+    fresh = JITCache(remote=rc)
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=fresh)
+    assert fresh.stats.remote_hits == 1
+
+
+def test_farm_rpc_faults_retry_within_budget():
+    store, rc = fleet()
+    farm = CompileFarm(SPEC, rc)                # default budget: 2 retries
+    plan = FaultPlan(seed=9).add("farm_rpc", times=1)
+    with faults_mod.activate(plan):
+        assert farm.prefetch([(POLY1, OPTS)]) == 1
+    assert farm.stats_dict()["push_failures"] == 0
+    assert plan.injected.get("farm_rpc") == 1
+
+
+# ------------------------------------------------------------------- Session
+
+def test_session_stats_remote_section():
+    store, rc = fleet()
+    jit_compile(POLY1, SPEC, opts=OPTS, cache=JITCache(remote=rc))
+    with Session([Device("d0", SPEC)], remote=rc) as sess:
+        sess.compile(POLY1, OPTS).result(120)
+        stats = sess.stats()
+    remote = stats["remote"]
+    assert remote["hits"] >= 1                  # warm-started off the fleet
+    assert stats["cache"]["remote_hits"] >= 1
+    for field in ("misses", "fetch_us", "hedges_won", "hedges_lost",
+                  "quarantined", "degraded"):
+        assert field in remote
+    assert remote["fetch_us"] > 0.0
+    assert remote["endpoints"]["r0"]["state"] == "closed"
+    assert remote["endpoints"]["r0"]["failed"] is False
+
+
+def test_session_without_remote_has_no_remote_section():
+    with Session([Device("d0", SPEC)]) as sess:
+        sess.compile(POLY1, OPTS).result(120)
+        stats = sess.stats()
+    assert "remote" not in stats
+    assert stats["cache"].get("remote_hits", 0) == 0
