@@ -14,6 +14,7 @@
   jit_cache_perf      → verify_level off/fused/full build overhead
   chaos_serving_perf  → seeded fault injection + device loss vs fault-free
   fleet_warm_start_perf → remote cache tier + compile farm fleet warm start
+  serving_perf        → continuous batching vs request-at-a-time serving
 
 Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
 writes the same rows as machine-readable JSON (one object per row with
@@ -31,7 +32,8 @@ from benchmarks import (chaos_serving_perf, fleet_warm_start_perf,
                         graph_replay_perf, jit_cache_perf, model_step,
                         overlay_exec_perf, par_time, persistent_cache_perf,
                         queue_sched_perf, reconfig_time, replication_scaling,
-                        resource_table, roofline_report, template_build_perf)
+                        resource_table, roofline_report, serving_perf,
+                        template_build_perf)
 
 SUITES = {
     "par_time": par_time.run,
@@ -48,6 +50,7 @@ SUITES = {
     "jit_cache_perf": jit_cache_perf.run,
     "chaos_serving_perf": chaos_serving_perf.run,
     "fleet_warm_start_perf": fleet_warm_start_perf.run,
+    "serving_perf": serving_perf.run,
 }
 
 

@@ -1,0 +1,273 @@
+"""Continuous-batching serving benchmark (ISSUE 9 acceptance benchmark).
+
+Replays one deterministic bursty three-family trace (transformer /
+mamba2 / moe tenants under mixed SLO classes) on an identical
+two-overlay fleet, three ways:
+
+  * **sequential** — the request-at-a-time oracle
+    (:func:`repro.serve.server.serve_sequential`): same graphs, same
+    Session machinery, no batching.  The throughput baseline AND the
+    bit-identity reference.
+  * **batched**    — :class:`~repro.serve.server.InferenceServer` with
+    continuous batching (iteration-level join/leave, iter_quantum
+    tenant chunking).
+  * **chaos**      — the batched path again under a seeded
+    :class:`~repro.core.faults.FaultPlan` injecting ~5% transient
+    ``device_exec`` faults; the recovery ladder must absorb every one.
+
+All three legs are measured WARM: every model's prefill/decode graph is
+compiled (``ServedModel.result()``) before the clock anchor ``t0 =
+session.now_us()`` is taken and arrivals are offset from it — cold-start
+makespans are dominated by compile wall time and would gate nothing.
+
+Gates (CI fails on any):
+
+  1. **throughput** — sequential/batched makespan ratio >= ``--gate``
+     (default 2.0);
+  2. **zero dropped** — no leg rejects or loses a single request;
+  3. **correctness** — batched outputs BIT-IDENTICAL to sequential, and
+     chaos outputs bit-identical to the fault-free batched run;
+  4. **chaos proof** — the chaos leg actually injected faults.
+
+    PYTHONPATH=src python benchmarks/serving_perf.py \
+        [--gate 2.0] [--json out.json] [--update BENCH_compile.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.faults import FaultPlan
+from repro.core.runtime import Device, OverlaySpec
+from repro.core.session import Session
+from repro.serve import InferenceServer, Request, serve_sequential
+from repro.serve.models import PIPELINES, build_zoo
+
+SPEC_KW = dict(width=8, height=8, dsp_per_fu=2)
+N_DEVICES = 2
+MAX_BATCH = 8
+
+# three families under mixed SLO classes: the realtime tenant's
+# iterations book engine time first, the batch tenant soaks up slack
+TENANTS = {"transformer": "realtime", "mamba2": "standard", "moe": "batch"}
+
+# bursty trace: 3 bursts of 12 requests, 2us apart within a burst, 40us
+# between bursts — enough simultaneity that continuous batching folds
+# whole bursts into shared iterations
+N_REQUESTS = 36
+BURST = 12
+
+# seed chosen so the 5% device_exec rate demonstrably fires over this
+# trace while the ladder still heals every injection
+FAULT_SEED = 11
+EXEC_FAULT_RATE = 0.05
+
+
+def make_trace(seed: int = 7) -> List[dict]:
+    """Request kwargs (not Requests: each leg needs fresh tickets with
+    untouched runtime fields), trace-ordered."""
+    rng = np.random.default_rng(seed)
+    fams = sorted(TENANTS)
+    out = []
+    for i in range(N_REQUESTS):
+        fam = fams[i % len(fams)]
+        out.append(dict(
+            model=fam,
+            prompt=rng.standard_normal(
+                PIPELINES[fam].state_dim).astype(np.float32),
+            decode_steps=int(rng.integers(4, 8)),
+            offset_us=(i // BURST) * 40.0 + (i % BURST) * 2.0))
+    return out
+
+
+def _requests(trace: List[dict], t0: float) -> List[Request]:
+    return [Request(kw["model"], kw["prompt"], kw["decode_steps"],
+                    t_arrival_us=t0 + kw["offset_us"]) for kw in trace]
+
+
+def _digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _session(plan: Optional[FaultPlan] = None) -> Session:
+    spec = OverlaySpec(**SPEC_KW)
+    return Session([Device(f"ovl{i}", spec) for i in range(N_DEVICES)],
+                   faults=plan)
+
+
+def run_sequential(trace: List[dict]) -> Dict:
+    with _session() as sess:
+        zoo = build_zoo(sess, sorted(TENANTS))
+        for m in zoo.values():
+            m.result()                      # warm: compile off the clock
+        t0 = sess.now_us()
+        reqs = _requests(trace, t0)
+        outputs, makespan = serve_sequential(sess, zoo, reqs)
+        digests = [_digest(outputs[r.rid]) for r in reqs]
+        for m in zoo.values():
+            m.release()
+    return dict(makespan_us=round(makespan - t0, 1), requests=len(reqs),
+                rejected=0, digests=digests)
+
+
+def run_batched(trace: List[dict], chaos: bool) -> Dict:
+    plan = (FaultPlan(seed=FAULT_SEED).add("device_exec",
+                                           rate=EXEC_FAULT_RATE)
+            if chaos else None)
+    with _session(plan) as sess:
+        with InferenceServer(sess, TENANTS, max_batch=MAX_BATCH) as srv:
+            for m in srv.zoo.values():
+                m.result()                  # warm: compile off the clock
+            t0 = sess.now_us()
+            reqs = _requests(trace, t0)
+            admitted = sum(srv.submit(r) for r in reqs)
+            makespan = srv.run()
+            serving = sess.stats()["serving"]
+            done = [r for r in reqs if r.output is not None]
+            digests = [_digest(r.output) for r in reqs
+                       if r.output is not None]
+            result = dict(
+                chaos=chaos, makespan_us=round(makespan - t0, 1),
+                requests=len(done), admitted=admitted,
+                rejected=serving["rejected"],
+                degraded_steps=serving["degraded_steps"],
+                occupancy={name: m["occupancy_ewma"]
+                           for name, m in serving["models"].items()},
+                iterations={name: m["iterations"]
+                            for name, m in serving["models"].items()},
+                latency_us=serving["latency_us"], digests=digests)
+            if chaos:
+                stats = sess.stats()
+                result["faults"] = stats["faults"]
+                result["recovery"] = {
+                    k: v for k, v in stats["recovery"].items()
+                    if k != "breakers"}
+    return result
+
+
+def bench() -> Dict:
+    trace = make_trace()
+    seq = run_sequential(trace)
+    bat = run_batched(trace, chaos=False)
+    cha = run_batched(trace, chaos=True)
+    return dict(
+        spec=SPEC_KW, devices=N_DEVICES, max_batch=MAX_BATCH,
+        tenants=TENANTS, n_requests=N_REQUESTS,
+        fault_seed=FAULT_SEED, exec_fault_rate=EXEC_FAULT_RATE,
+        sequential=seq, batched=bat, chaos=cha,
+        speedup=round(seq["makespan_us"] /
+                      max(bat["makespan_us"], 1e-9), 3),
+        bit_identical=(bat["digests"] == seq["digests"]),
+        chaos_bit_identical=(cha["digests"] == bat["digests"]),
+        all_complete=(bat["requests"] == N_REQUESTS and
+                      cha["requests"] == N_REQUESTS))
+
+
+def check_gate(result: Dict, gate: float) -> List[str]:
+    failures = []
+    if result["speedup"] < gate:
+        failures.append(
+            f"batched speedup {result['speedup']}x below gate {gate}x: "
+            f"{result['batched']['makespan_us']} vs "
+            f"{result['sequential']['makespan_us']} us sequential")
+    for key in ("sequential", "batched", "chaos"):
+        if result[key]["rejected"]:
+            failures.append(f"{key} run rejected "
+                            f"{result[key]['rejected']} requests")
+    if not result["all_complete"]:
+        failures.append(
+            f"dropped requests: batched completed "
+            f"{result['batched']['requests']}, chaos completed "
+            f"{result['chaos']['requests']} of {N_REQUESTS}")
+    if not result["bit_identical"]:
+        bad = sum(1 for a, b in zip(result["batched"]["digests"],
+                                    result["sequential"]["digests"])
+                  if a != b)
+        failures.append(f"{bad} batched outputs differ from the "
+                        f"sequential oracle")
+    if not result["chaos_bit_identical"]:
+        failures.append("chaos outputs differ from the fault-free "
+                        "batched run")
+    if not result["chaos"]["faults"]["injected"]:
+        failures.append("chaos leg injected no faults — the gate proved "
+                        "nothing; raise the rate or the trace length")
+    return failures
+
+
+def run() -> List[Dict]:
+    """run.py suite entry point."""
+    result = bench()
+    out = []
+    for key in ("sequential", "batched", "chaos"):
+        r = result[key]
+        extra = ""
+        if key != "sequential":
+            occ = np.mean(list(r["occupancy"].values()))
+            extra = (f", mean occupancy {occ:.2f}, "
+                     f"degraded_steps={r['degraded_steps']}")
+        out.append(dict(
+            name=f"serving/{key}",
+            us_per_call=r["makespan_us"],
+            derived=(f"fleet makespan {r['makespan_us']:.0f}us "
+                     f"{r['requests']} requests{extra}")))
+    out.append(dict(
+        name="serving/speedup",
+        us_per_call=0.0,
+        derived=(f"{result['speedup']}x sequential; "
+                 f"bit_identical={result['bit_identical']} "
+                 f"chaos_bit_identical={result['chaos_bit_identical']} "
+                 f"all_complete={result['all_complete']}")))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", type=float, default=2.0,
+                    help="min sequential/batched makespan ratio "
+                         "(default 2.0; <= 0 disables gating)")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--update", metavar="PATH", default=None,
+                    help="merge the result into an existing benchmark "
+                         "JSON under the 'serving' key")
+    args = ap.parse_args()
+    result = bench()
+
+    for key in ("sequential", "batched", "chaos"):
+        r = result[key]
+        print(f"{key:<10} fleet makespan {r['makespan_us']:>10.1f} us  "
+              f"({r['requests']} requests, {r['rejected']} rejected)")
+    cha = result["chaos"]
+    print(f"chaos: injected {cha['faults']['injected']}, "
+          f"degraded_steps={cha['degraded_steps']}")
+    print(f"speedup {result['speedup']}x, "
+          f"bit_identical={result['bit_identical']}, "
+          f"chaos_bit_identical={result['chaos_bit_identical']}, "
+          f"all_complete={result['all_complete']}")
+
+    failures = check_gate(result, args.gate) if args.gate > 0 else []
+    result["gate"] = args.gate
+    result["gate_failures"] = failures
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    if args.update:
+        with open(args.update) as f:
+            doc = json.load(f)
+        doc["serving"] = result
+        with open(args.update, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"updated {args.update} [serving]")
+    if failures:
+        for msg in failures:
+            print(f"GATE FAIL: {msg}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,14 @@ def _dfg_targets() -> List[Target]:
     except ImportError as e:           # jax absent: models are gated, not fatal
         print(f"repro.analysis: skipping model kernels ({e})",
               file=sys.stderr)
+    try:
+        from repro.core.dfg import trace
+        from repro.serve.models import STAGE_KERNELS
+        targets += [Target(f"serve:{name}", "dfg", trace(fn, n, name))
+                    for name, (fn, n) in sorted(STAGE_KERNELS.items())]
+    except ImportError as e:
+        print(f"repro.analysis: skipping serve stage kernels ({e})",
+              file=sys.stderr)
     return targets
 
 
@@ -97,6 +105,16 @@ def _artifact_targets() -> List[Target]:
                                   ck))
     except ImportError as e:
         print(f"repro.analysis: skipping model artifacts ({e})",
+              file=sys.stderr)
+    try:
+        from repro.serve.models import STAGE_KERNELS
+        for name, (fn, n) in sorted(STAGE_KERNELS.items()):
+            ck = jit_compile(fn, spec, opts=CompileOptions(
+                n_inputs=n, name=name, max_replicas=1, place_effort=0.25))
+            targets.append(Target(f"artifact:serve:{name}", "artifact",
+                                  ck))
+    except ImportError as e:
+        print(f"repro.analysis: skipping serve artifacts ({e})",
               file=sys.stderr)
     return targets
 

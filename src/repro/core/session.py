@@ -53,7 +53,7 @@ from __future__ import annotations
 import concurrent.futures
 import threading
 import time
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 from repro.core import faults as faults_mod
 from repro.core import recovery as recovery_mod
@@ -289,6 +289,10 @@ class Session:
         # holds its Program handles across requests, so the baseline must
         self._nodewise_futs: Dict[Tuple, list] = {}  # lock: _lock
         self._graph_count = 0  # lock: _lock
+        # pluggable stats() sections: subsystem name -> zero-arg provider
+        # (repro.serve registers "serving" here).  Providers run OUTSIDE
+        # the session lock — they may call back into Session accessors
+        self._stats_sections: Dict[str, Callable[[], dict]] = {}  # lock: _lock
         self._t0 = time.perf_counter()
         self._closed = False  # lock: _lock
 
@@ -714,6 +718,7 @@ class Session:
         return GraphExec(self, graph, partitions, futures, tenant)
 
     def launch(self, gexec: GraphExec, *inputs,
+               wait_for: Sequence[Event] = (),
                tenant: Optional[str] = None) -> Event:
         """Replay an instantiated graph over real input arrays.
 
@@ -722,6 +727,10 @@ class Session:
         cross-partition dependencies expressed as ordinary ``wait_for``
         event edges on the per-tenant out-of-order queues (each partition
         execution also chains on its own compile event, Fig. 5 style).
+        ``wait_for`` events gate the whole replay: they are added to every
+        ROOT partition's dependencies, so no part of the graph models
+        starting before them (serving uses this to chain a request's
+        decode steps and to anchor launches at request-arrival events).
         Returns one aggregate Event: ``wait()`` yields the graph outputs,
         timestamps span the whole replay.
 
@@ -738,12 +747,16 @@ class Session:
                 f"{graph.name}: expected {len(graph.inputs)} inputs, "
                 f"got {len(inputs)}")
         bufs = [a if isinstance(a, Buffer) else Buffer(a) for a in inputs]
+        extern = tuple(wait_for)
         events = []
         for p, (fut, args, deps, label) in zip(gexec.partitions,
                                                gexec._steps):
             argv = [bufs[r[1]] if r[0] == "in" else
                     events[r[1]].outputs[r[2]] for r in args]
             dep_evs = tuple(events[d] for d in deps)
+            if not deps:
+                dep_evs = extern       # roots inherit the external gate
+
             try:
                 events.append(self.enqueue(fut, *argv, wait_for=dep_evs,
                                            tenant=tenant, label=label))
@@ -909,14 +922,24 @@ class Session:
         return dict(charges=sum(q.config_charges for q in queues),
                     config_us=sum(q.config_us_total for q in queues))
 
+    def register_stats_section(self, name: str,
+                               provider: Callable[[], dict]) -> None:
+        """Attach a subsystem dashboard to :meth:`stats`: ``provider()``
+        is called on every stats() and its dict lands under ``name``
+        (the inference server registers ``"serving"`` this way).
+        Re-registering a name replaces its provider."""
+        with self._lock:
+            self._stats_sections[name] = provider
+
     def stats(self) -> dict:
         """One serving dashboard blob: cache tiers, per-device makespan,
         and the self-healing counters — retries, hedge outcomes, breaker
         trips/states, fallback ladder hits, migrations — plus the disk
         tier's quarantine/write-error counters (previously only reachable
         via cache internals), the fleet remote tier's dashboard when one
-        is attached, and the fault plan's injection tallies when chaos is
-        on."""
+        is attached, the fault plan's injection tallies when chaos is
+        on, and every section a subsystem registered through
+        :meth:`register_stats_section` (e.g. ``"serving"``)."""
         recovery = self.recovery.as_dict()
         recovery["breaker_trips"] = sum(
             b.trips for b in self.scheduler.breakers.values())
@@ -943,6 +966,10 @@ class Session:
             out["remote"] = remote.stats_dict()
         if self.faults is not None:
             out["faults"] = self.faults.as_dict()
+        with self._lock:
+            sections = list(self._stats_sections.items())
+        for name, provider in sections:     # outside the lock: providers
+            out[name] = provider()          # may re-enter Session APIs
         return out
 
     # ------------------------------------------------------------ lifecycle

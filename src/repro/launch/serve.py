@@ -1,40 +1,53 @@
-"""Serving driver: batched autoregressive decode with a prefill phase.
+"""Serving driver — continuous-batching inference over the overlay JIT.
+
+The default path drives :mod:`repro.serve`: the requested arch's family
+is mapped onto its overlay serving pipeline
+(:data:`repro.serve.models.FAMILY_PIPELINE`), an
+:class:`~repro.serve.server.InferenceServer` is stood up on a modelled
+two-device Session, and a synthetic request trace is served with
+continuous batching — printing admission/completion counters, batch
+occupancy and per-SLO-class modelled latency from
+``Session.stats()["serving"]``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
-      --batch 4 --prompt-len 16 --gen 32
+      --requests 24 --gen 8
+
+The pre-PR-9 raw-JAX driver (token-recurrent prefill + argmax/categorical
+decode through ``make_serve_step``, never touching the Session) is kept
+behind ``--legacy`` with a DeprecationWarning, parity-tested in
+``tests/test_launch_serve.py``.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ALL_ARCHS, get_arch, reduced_config
-from repro.launch.mesh import make_host_mesh
-from repro.models.registry import build_model
-from repro.train.step import make_serve_step
 
 
-def _named(mesh, tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
-                        is_leaf=lambda x: isinstance(x, P))
+def _legacy_main(args) -> None:
+    """The raw-JAX serving loop this driver used before repro.serve."""
+    warnings.warn(
+        "--legacy drives the raw-JAX serve loop, which bypasses the "
+        "Session runtime (no JIT cache, no queues, no SLO classes); it "
+        "will be removed once the overlay path covers sampling. Use the "
+        "default repro.serve path instead.",
+        DeprecationWarning, stacklevel=2)
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.registry import build_model
+    from repro.train.step import make_serve_step
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ALL_ARCHS), required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--model-shards", type=int, default=1)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    def _named(mesh, tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -53,8 +66,9 @@ def main() -> None:
     prompt = np.random.default_rng(0).integers(
         0, cfg.vocab, (args.batch, args.prompt_len), np.int32)
 
-    # prefill: feed prompt tokens one step at a time through the decode path
-    # (token-recurrent prefill; a blockwise prefill is the prefill_* shape)
+    # prefill: feed prompt tokens one step at a time through the decode
+    # path (token-recurrent prefill; blockwise prefill is the prefill_*
+    # shape)
     t0 = time.perf_counter()
     logits = None
     for i in range(args.prompt_len):
@@ -86,6 +100,76 @@ def main() -> None:
           f"decode {args.gen} tok in {t_gen:.2f}s "
           f"({args.batch * args.gen / t_gen:.1f} tok/s)")
     print("sample:", gen[0, :16].tolist())
+
+
+def serve_overlay(arch: str, n_requests: int, gen: int, slo: str,
+                  max_batch: int, devices: int = 2,
+                  seed: int = 0) -> dict:
+    """Serve a synthetic trace for ``arch`` through repro.serve; returns
+    the ``stats()["serving"]`` blob (drives both main() and the parity
+    test)."""
+    from repro.core.runtime import Device, OverlaySpec
+    from repro.core.session import Session
+    from repro.serve import InferenceServer, Request
+    from repro.serve.models import FAMILY_PIPELINE, PIPELINES
+
+    cfg = get_arch(arch)
+    family = FAMILY_PIPELINE[cfg.family]
+    dim = PIPELINES[family].state_dim
+    spec = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+    rng = np.random.default_rng(seed)
+    with Session([Device(f"ovl{i}", spec) for i in range(devices)]) as s:
+        srv = InferenceServer(s, {family: slo}, max_batch=max_batch)
+        reqs = [Request(family, rng.standard_normal(dim), decode_steps=gen,
+                        t_arrival_us=float(i) * 25.0)
+                for i in range(n_requests)]
+        for r in reqs:
+            srv.submit(r)
+        makespan = srv.run()
+        stats = s.stats()["serving"]
+        stats["makespan_us"] = makespan
+        stats["family"] = family
+        srv.close()
+    return stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALL_ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="legacy: JAX batch size; default: max batch")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="deprecated raw-JAX loop (bypasses the Session)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="overlay path: synthetic trace length")
+    ap.add_argument("--slo", choices=("realtime", "standard", "batch"),
+                    default="standard")
+    args = ap.parse_args()
+
+    if args.legacy:
+        _legacy_main(args)
+        return
+
+    stats = serve_overlay(args.arch, args.requests, args.gen, args.slo,
+                          max_batch=args.batch)
+    fam = stats["family"]
+    m = stats["models"][fam]
+    print(f"arch={args.arch} -> pipeline={fam} slo={args.slo} "
+          f"max_batch={args.batch}")
+    print(f"admitted={stats['admitted']} completed={stats['completed']} "
+          f"rejected={stats['rejected']} "
+          f"degraded_steps={stats['degraded_steps']}")
+    print(f"iterations={m['iterations']} "
+          f"occupancy_ewma={m['occupancy_ewma']:.2f} "
+          f"makespan={stats['makespan_us']:.0f}us")
+    for cls, lat in stats["latency_us"].items():
+        print(f"  {cls}: n={lat['n']} p50={lat['p50']:.0f}us "
+              f"p99={lat['p99']:.0f}us")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.serve — continuous-batching inference over the Session API.
+
+The model zoo's layer pipelines as captured kernel graphs
+(:mod:`~repro.serve.models`), an ORCA-style iteration-level batching
+server with SLO classes and replica autoscaling hints
+(:mod:`~repro.serve.server`), and GPipe-wavefront stage parallelism for
+partitioned replays (:mod:`~repro.serve.stagepar` — imported lazily, it
+pulls the JAX trainer's schedule helpers).  See ``docs/serving.md``.
+"""
+
+from repro.serve.batcher import ModelBatch
+from repro.serve.models import (FAMILY_PIPELINE, PIPELINES, STAGE_KERNELS,
+                                PipelineSpec, ServedModel, build_zoo)
+from repro.serve.request import (DECODING, DONE, PREFILLING, QUEUED,
+                                 REJECTED, Request)
+from repro.serve.server import (InferenceServer, serve_sequential)
+from repro.serve.slo import (BATCH, REALTIME, SLO_CLASSES, STANDARD,
+                             SLOClass, get_slo)
+
+__all__ = [
+    "BATCH", "DECODING", "DONE", "FAMILY_PIPELINE", "InferenceServer",
+    "ModelBatch", "PIPELINES", "PREFILLING", "PipelineSpec", "QUEUED",
+    "REALTIME", "REJECTED", "Request", "SLOClass", "SLO_CLASSES",
+    "STAGE_KERNELS", "STANDARD", "ServedModel", "build_zoo", "get_slo",
+    "serve_sequential",
+]

@@ -1,0 +1,53 @@
+"""launch.serve migration: the driver serves through repro.serve by
+default; the raw-JAX loop survives behind --legacy with a
+DeprecationWarning and unchanged (deterministic) behaviour."""
+
+import argparse
+import contextlib
+import io
+
+import pytest
+
+from repro.launch.serve import _legacy_main, serve_overlay
+from repro.serve.models import FAMILY_PIPELINE, PIPELINES
+
+
+def test_overlay_path_serves_every_arch_family():
+    # one arch per family is enough: the driver routes ArchConfig.family
+    # onto a serve pipeline, and the pipelines are covered in test_serve
+    stats = serve_overlay("llama3-8b", n_requests=6, gen=3,
+                          slo="realtime", max_batch=4)
+    assert stats["family"] == "transformer"
+    assert stats["admitted"] == 6 and stats["completed"] == 6
+    assert stats["rejected"] == 0
+    assert stats["models"]["transformer"]["slo"] == "realtime"
+    assert stats["latency_us"]["realtime"]["n"] == 6
+
+
+def test_family_map_covers_all_archs():
+    from repro.configs.registry import ALL_ARCHS, get_arch
+    for arch in ALL_ARCHS:
+        fam = FAMILY_PIPELINE[get_arch(arch).family]
+        assert fam in PIPELINES
+
+
+def _legacy_args():
+    return argparse.Namespace(arch="llama3-8b", reduced=True, batch=2,
+                              prompt_len=2, gen=2, model_shards=1,
+                              temperature=0.0)
+
+
+@pytest.mark.slow
+def test_legacy_path_warns_and_is_deterministic():
+    outs = []
+    for _ in range(2):
+        buf = io.StringIO()
+        with pytest.warns(DeprecationWarning):
+            with contextlib.redirect_stdout(buf):
+                _legacy_main(_legacy_args())
+        outs.append(buf.getvalue())
+    # the parity contract: same seeds, same tokens, run after run
+    sample = [line for line in outs[0].splitlines()
+              if line.startswith("sample:")]
+    assert sample and sample == [line for line in outs[1].splitlines()
+                                 if line.startswith("sample:")]

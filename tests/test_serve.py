@@ -1,0 +1,371 @@
+"""Continuous-batching inference server (repro.serve).
+
+The load-bearing claims, each asserted here:
+  * continuous-batched decode is BIT-identical to request-at-a-time
+    sequential serving (the batcher concatenates states; every pipeline
+    stage is elementwise);
+  * requests join and leave the running batch only at decode-step
+    boundaries (iteration-level scheduling);
+  * SLO classes drive admission caps, Session priorities and step order;
+  * a served model warm-starts across a host restart through the disk
+    cache tier (no compiler stage re-runs);
+  * under injected device_exec faults every request still completes with
+    identical outputs (Session healing ladder), and when the batched
+    launch itself is unhealable the server degrades that iteration to
+    per-request solo launches (the request-level degradation rung);
+  * microbatched stage parallelism (GPipe wavefront) is bit-identical.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cache import JITCache
+from repro.core.faults import FaultPlan
+from repro.core.recovery import RetryPolicy
+from repro.core.runtime import Device, OverlaySpec
+from repro.core.session import Session
+from repro.parallel.pipeline import bubble_fraction, pipeline_schedule
+from repro.serve import (DONE, QUEUED, REJECTED, InferenceServer,
+                         PIPELINES, Request, SLO_CLASSES, build_zoo,
+                         get_slo, serve_sequential)
+from repro.serve.stagepar import launch_staged
+
+SPEC = OverlaySpec(width=8, height=8, dsp_per_fu=2)
+
+
+def two_devices():
+    return [Device("a", SPEC), Device("b", SPEC)]
+
+
+def make_trace(families, n, seed=7, spread_us=10.0, steps=(4, 7)):
+    """Deterministic request trace; returns constructor kwargs so both
+    the batched and the sequential run build IDENTICAL fresh requests."""
+    rng = np.random.default_rng(seed)
+    lo, hi = steps
+    out = []
+    for i in range(n):
+        fam = families[i % len(families)]
+        out.append(dict(model=fam,
+                        prompt=rng.standard_normal(
+                            PIPELINES[fam].state_dim).astype(np.float32),
+                        decode_steps=lo + (i % (hi - lo + 1)),
+                        t_arrival_us=float(i) * spread_us))
+    return out
+
+
+def run_sequential_oracle(families, trace):
+    """Clean-room request-at-a-time serve; rid -> final state."""
+    with Session(two_devices()) as sess:
+        zoo = build_zoo(sess, families)
+        reqs = [Request(**kw) for kw in trace]
+        outs, makespan = serve_sequential(sess, zoo, reqs)
+        ordered = [outs[r.rid] for r in reqs]
+    return ordered, makespan
+
+
+# ------------------------------------------------------------ bit identity
+
+def test_batched_decode_bit_identical_to_sequential():
+    families = ["transformer", "mamba2", "moe"]
+    trace = make_trace(families, 12)
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, families, max_batch=4)
+        reqs = [Request(**kw) for kw in trace]
+        for r in reqs:
+            assert srv.submit(r)
+        srv.run()
+        assert all(r.state == DONE for r in reqs)
+        batched = [r.output for r in reqs]
+    oracle, _ = run_sequential_oracle(families, trace)
+    for got, want in zip(batched, oracle):
+        assert np.array_equal(got, want)     # BIT identical, not allclose
+
+
+def test_all_five_families_serve_and_match():
+    families = sorted(PIPELINES)             # the whole zoo
+    trace = make_trace(families, 10, steps=(3, 4))
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, families, max_batch=4)
+        reqs = [Request(**kw) for kw in trace]
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        batched = [r.output for r in reqs]
+    oracle, _ = run_sequential_oracle(families, trace)
+    for got, want in zip(batched, oracle):
+        assert np.array_equal(got, want)
+
+
+def test_stagepar_microbatched_replay_bit_identical():
+    with Session(two_devices()) as sess:
+        zoo = build_zoo(sess, ["transformer"], max_partition_fus=2)
+        model = zoo["transformer"].result()
+        assert model.prefill_exec.n_partitions >= 2   # a real pipeline
+        x = np.linspace(-2.0, 2.0, model.state_dim).astype(np.float32)
+        whole = sess.launch(model.prefill_exec, x)
+        ev, staged = launch_staged(sess, model.prefill_exec, x, n_micro=4)
+        assert np.array_equal(staged, whole.outputs[0].read())
+        assert np.array_equal(ev.outputs[0].read(), staged)
+        assert len(ev.deps) == 4
+
+
+def test_pipeline_schedule_wavefront():
+    sched = pipeline_schedule(n_micro=3, n_stages=2)
+    # microbatch m occupies stage s at step m+s; all (s, m) pairs appear
+    assert sched == [(0, 0, 0), (1, 0, 1), (1, 1, 0), (2, 0, 2),
+                     (2, 1, 1), (3, 1, 2)]
+    assert bubble_fraction(3, 2) == pytest.approx(1.0 / 4.0)
+    assert bubble_fraction(8, 1) == 0.0
+    with pytest.raises(ValueError):
+        pipeline_schedule(0, 1)
+
+
+# ------------------------------------------------- iteration-level batching
+
+def test_join_and_leave_at_step_boundaries():
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, ["transformer"], max_batch=4,
+                              iter_quantum=1)
+        dim = PIPELINES["transformer"].state_dim
+        early = Request("transformer", np.ones(dim), decode_steps=5,
+                        t_arrival_us=0.0)
+        srv.submit(early)
+        batch = srv.batch("transformer")
+        assert srv.step()
+        # early joined at the first boundary and decoded one step
+        assert batch.members == [early] and early.steps_done == 1
+        # a request arriving AFTER the current boundary must not join yet
+        late = Request("transformer", np.ones(dim), decode_steps=2,
+                       t_arrival_us=batch.t_us + 1e9)
+        srv.submit(late)
+        assert srv.step()
+        assert late not in batch.members and late.steps_done == 0
+        # pull its arrival back before the boundary: joins at the NEXT one
+        late.t_arrival_us = 0.0
+        assert srv.step()
+        assert late in batch.members and late.steps_done == 1
+        # late's 2nd step is its last: it leaves at this boundary while
+        # early (one step behind on its 4) keeps decoding
+        assert srv.step()
+        assert late.state == DONE and late not in batch.members
+        assert early in batch.members
+        while srv.step():
+            pass
+        assert early.state == DONE and early.steps_done == 5
+
+
+def test_batch_capacity_respected():
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, ["mamba2"], max_batch=2,
+                              iter_quantum=1)
+        dim = PIPELINES["mamba2"].state_dim
+        reqs = [Request("mamba2", np.full(dim, float(i)), decode_steps=3,
+                        t_arrival_us=0.0) for i in range(5)]
+        for r in reqs:
+            srv.submit(r)
+        batch = srv.batch("mamba2")
+        seen_sizes = []
+        while srv.step():
+            seen_sizes.append(len(batch.members))
+        assert max(seen_sizes) <= 2
+        assert all(r.state == DONE for r in reqs)
+
+
+# ----------------------------------------------------------- SLO semantics
+
+def test_admission_rejects_beyond_slo_queue_cap():
+    cap = SLO_CLASSES["realtime"].max_queue
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, {"moe": "realtime"}, max_batch=2)
+        dim = PIPELINES["moe"].state_dim
+        reqs = [Request("moe", np.ones(dim), decode_steps=1,
+                        t_arrival_us=0.0) for _ in range(cap + 4)]
+        admitted = [srv.submit(r) for r in reqs]
+        assert admitted.count(True) == cap
+        assert admitted.count(False) == 4
+        assert [r.state for r in reqs[cap:]] == [REJECTED] * 4
+        srv.run()
+        st = sess.stats()["serving"]
+        assert st["admitted"] == cap and st["rejected"] == 4
+        assert st["completed"] == cap
+        # rejected requests never ran
+        assert all(r.output is None for r in reqs[cap:])
+
+
+def test_slo_priority_drives_session_and_step_order():
+    families = {"transformer": "realtime", "mamba2": "batch"}
+    trace = (make_trace(["transformer"], 4, seed=1, spread_us=0.0)
+             + make_trace(["mamba2"], 4, seed=2, spread_us=0.0))
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, families, max_batch=4)
+        # tenant priorities landed in the scheduler (shedding order)
+        assert sess.scheduler.priorities["transformer"] == \
+            get_slo("realtime").priority
+        assert sess.scheduler.priorities["mamba2"] == \
+            get_slo("batch").priority
+        reqs = [Request(**kw) for kw in trace]
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        rt_done = max(r.t_done_us for r in reqs[:4])
+        batch_done = max(r.t_done_us for r in reqs[4:])
+        # same arrivals, same step counts: the realtime tenant books
+        # engine time first each round and finishes first
+        assert rt_done < batch_done
+        lat = sess.stats()["serving"]["latency_us"]
+        assert lat["realtime"]["p50"] <= lat["batch"]["p50"]
+
+
+def test_request_slo_override_and_unknown_model():
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, {"moe": "batch"}, max_batch=2)
+        dim = PIPELINES["moe"].state_dim
+        req = Request("moe", np.ones(dim), decode_steps=1, slo="realtime")
+        assert srv.slo_of(req).name == "realtime"       # own class wins
+        inherit = Request("moe", np.ones(dim), decode_steps=1)
+        assert srv.slo_of(inherit).name == "batch"      # tenant default
+        with pytest.raises(KeyError):
+            srv.submit(Request("nope", np.ones(4), decode_steps=1))
+        with pytest.raises(ValueError):
+            srv.submit(Request("moe", np.ones(3), decode_steps=1))
+
+
+# ------------------------------------------------------- warm restart path
+
+def test_served_model_warm_restarts_from_disk_tier(tmp_path):
+    persist = str(tmp_path / "jit")
+    families = ["transformer", "whisper"]
+    with Session(two_devices(), persist_dir=persist) as sess:
+        zoo = build_zoo(sess, families)
+        n_parts = sum(m.prefill_exec.result().n_partitions
+                      + m.decode_exec.result().n_partitions
+                      for m in zoo.values())
+        assert sess.cache.stats.misses > 0        # cold host compiled
+    # "restart": fresh process state, same persist dir
+    with Session(two_devices(),
+                 cache=JITCache(persist_dir=persist)) as sess2:
+        zoo2 = build_zoo(sess2, families)
+        for m in zoo2.values():
+            m.result()
+        assert sess2.cache.stats.misses == 0      # no compiler stage ran
+        assert sess2.stats()["disk"]["hits"] >= n_parts
+        # and the warm models still serve correctly
+        trace = make_trace(families, 4, steps=(2, 3))
+        srv_reqs = [Request(**kw) for kw in trace]
+        outs, _ = serve_sequential(sess2, zoo2, srv_reqs)
+        assert len(outs) == 4
+
+
+# ------------------------------------------------------------- chaos legs
+
+def test_injected_exec_faults_complete_every_request():
+    families = ["transformer", "mamba2"]
+    trace = make_trace(families, 10, seed=3)
+    plan = FaultPlan(seed=11).add("device_exec", rate=0.05)
+    with Session(two_devices(), faults=plan) as sess:
+        srv = InferenceServer(sess, families, max_batch=4)
+        reqs = [Request(**kw) for kw in trace]
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        st = sess.stats()["serving"]
+        assert st["completed"] == len(reqs)
+        assert all(r.state == DONE for r in reqs)
+        chaos = [r.output for r in reqs]
+    oracle, _ = run_sequential_oracle(families, trace)
+    for got, want in zip(chaos, oracle):
+        assert np.array_equal(got, want)   # healing is bit-transparent
+
+
+def test_unhealable_batched_launch_degrades_to_solo():
+    """The request-level degradation rung: the batched decode launch dies
+    (fused AND nodewise replay both faulted, zero retry budget), the
+    server replays that one iteration per-request, every request
+    completes bit-identically and the step is counted."""
+    families = ["transformer"]
+    trace = make_trace(families, 4, spread_us=0.0, steps=(3, 3))
+    plan = FaultPlan(seed=5).add("device_exec", times=2, match="ffn_gate")
+    retry = RetryPolicy(enqueue_retries=0, breaker_threshold=99)
+    with Session(two_devices(), faults=plan, retry=retry) as sess:
+        srv = InferenceServer(sess, families, max_batch=4)
+        reqs = [Request(**kw) for kw in trace]
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        st = sess.stats()
+        assert st["serving"]["degraded_steps"] >= 1
+        assert st["serving"]["completed"] == len(reqs)
+        assert st["recovery"]["fallback_nodewise"] >= 1
+        assert st["faults"]["injected"]["device_exec"] == 2
+        degraded = [r.output for r in reqs]
+    oracle, _ = run_sequential_oracle(families, trace)
+    for got, want in zip(degraded, oracle):
+        assert np.array_equal(got, want)
+
+
+# ------------------------------------------------------ dashboard + scaling
+
+def test_serving_stats_section_shape():
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, {"zamba2": "standard"}, max_batch=2)
+        dim = PIPELINES["zamba2"].state_dim
+        reqs = [Request("zamba2", np.full(dim, 0.5), decode_steps=2,
+                        t_arrival_us=0.0) for _ in range(4)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        st = sess.stats()["serving"]
+        for key in ("admitted", "completed", "rejected",
+                    "degraded_steps", "models", "latency_us"):
+            assert key in st
+        m = st["models"]["zamba2"]
+        assert m["slo"] == "standard"
+        assert 0.0 < m["occupancy_ewma"] <= 1.0
+        assert m["iterations"] >= 2
+        lat = st["latency_us"]["standard"]
+        assert lat["n"] == 4 and lat["p50"] <= lat["p99"]
+
+
+def test_autoscale_hints_and_resize():
+    with Session(two_devices()) as sess:
+        srv = InferenceServer(sess, ["moe"], max_batch=2, iter_quantum=1)
+        dim = PIPELINES["moe"].state_dim
+        reqs = [Request("moe", np.full(dim, 0.1 * i), decode_steps=6,
+                        t_arrival_us=0.0) for i in range(6)]
+        for r in reqs:
+            srv.submit(r)
+        # run a few boundaries: batch full (occ EWMA -> 1) + backlog
+        for _ in range(4):
+            srv.step()
+        assert srv.autoscale_hints()["moe"] == 1
+        caps = srv.apply_autoscale(step=2, ceiling=8)
+        assert caps["moe"] == 4
+        assert srv.zoo["moe"].max_replicas == 4
+        # serving continues correctly on the re-instantiated graphs
+        srv.run()
+        assert all(r.state == DONE for r in reqs)
+        batched = [r.output for r in reqs]
+    with Session(two_devices()) as s2:
+        zoo = build_zoo(s2, ["moe"])
+        outs, _ = serve_sequential(
+            s2, zoo, [Request("moe", np.full(dim, 0.1 * i),
+                              decode_steps=6, t_arrival_us=0.0)
+                      for i in range(6)])
+        for got, want in zip(batched, outs.values()):
+            assert np.array_equal(got, want)
+
+
+def test_request_lifecycle_and_validation():
+    r = Request("transformer", np.ones(8), decode_steps=2,
+                t_arrival_us=5.0)
+    assert r.state == QUEUED and not r.finished
+    assert r.latency_us is None and r.first_step_latency_us is None
+    with pytest.raises(ValueError):
+        Request("transformer", np.ones((2, 2)), decode_steps=1)
+    with pytest.raises(ValueError):
+        Request("transformer", np.ones(8), decode_steps=0)
+    with pytest.raises(ValueError):
+        Request("transformer", np.ones(8), decode_steps=1,
+                t_arrival_us=-1.0)
+    with pytest.raises(KeyError):
+        get_slo("no-such-class")
