@@ -15,6 +15,7 @@
   chaos_serving_perf  → seeded fault injection + device loss vs fault-free
   fleet_warm_start_perf → remote cache tier + compile farm fleet warm start
   serving_perf        → continuous batching vs request-at-a-time serving
+  trace_overhead_perf → tracing-off zero-overhead gates + profile re-cut
 
 Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
 writes the same rows as machine-readable JSON (one object per row with
@@ -33,7 +34,7 @@ from benchmarks import (chaos_serving_perf, fleet_warm_start_perf,
                         overlay_exec_perf, par_time, persistent_cache_perf,
                         queue_sched_perf, reconfig_time, replication_scaling,
                         resource_table, roofline_report, serving_perf,
-                        template_build_perf)
+                        template_build_perf, trace_overhead_perf)
 
 SUITES = {
     "par_time": par_time.run,
@@ -51,6 +52,7 @@ SUITES = {
     "chaos_serving_perf": chaos_serving_perf.run,
     "fleet_warm_start_perf": fleet_warm_start_perf.run,
     "serving_perf": serving_perf.run,
+    "trace_overhead_perf": trace_overhead_perf.run,
 }
 
 

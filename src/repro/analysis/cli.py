@@ -10,7 +10,7 @@ Targets are either built-in suite names or paths:
 * ``locklint``  — run the A3xx lock-discipline lint over the runtime
                   modules (``runtime.py``/``cache.py``/``session.py``/
                   ``queue.py``/``faults.py``/``recovery.py``/
-                  ``remote.py``);
+                  ``remote.py``/``serve/*``/``obs/*``);
 * ``artifacts`` — JIT-compile the paper suite + model kernels and re-prove
                   every artifact's legality (A2xx); implied by
                   ``--verify``;

@@ -60,7 +60,9 @@ DEFAULT_TARGETS = ("src/repro/core/runtime.py", "src/repro/core/cache.py",
                    "src/repro/core/session.py", "src/repro/core/queue.py",
                    "src/repro/core/faults.py", "src/repro/core/recovery.py",
                    "src/repro/core/remote.py", "src/repro/serve/server.py",
-                   "src/repro/serve/batcher.py")
+                   "src/repro/serve/batcher.py", "src/repro/obs/trace.py",
+                   "src/repro/obs/metrics.py", "src/repro/obs/profile.py",
+                   "src/repro/obs/recut.py")
 
 _LOCK_RE = re.compile(r"#\s*lock:\s*(?P<spec>[^#]+?)\s*$")
 _NAME_RE = re.compile(r"^[A-Za-z_]\w*$")

@@ -54,6 +54,7 @@ from repro.core.dfg import DFG
 from repro.core.faults import fault_point
 from repro.core.options import CompileOptions
 from repro.core.overlay import OverlaySpec
+from repro.obs import trace as obs_trace
 
 CacheKey = str
 
@@ -499,12 +500,18 @@ class JITCache:
         with self._lock:
             entry = self._entries.get(key)
             if entry is None and self.disk is not None:
-                entry = self.disk.get(key)
+                with obs_trace.span("cache:disk", "cache",
+                                    kind="kernel") as _sp:
+                    entry = self.disk.get(key)
+                    _sp["hit"] = entry is not None
                 if entry is not None:
                     self.stats.disk_hits += 1
                     self._insert(self._entries, key, entry, self.capacity)
             if entry is None and self.remote is not None:
-                entry = self.remote.get(key)
+                with obs_trace.span("cache:remote", "cache",
+                                    kind="kernel") as _sp:
+                    entry = self.remote.get(key)
+                    _sp["hit"] = entry is not None
                 if entry is not None:
                     # one fetch warms every local tier: promote into the
                     # LRU and persist to disk so a restart stays warm even
@@ -575,13 +582,19 @@ class JITCache:
         with self._lock:
             entry = self._templates.get(key)
             if entry is None and self.disk is not None:
-                entry = self.disk.get(key)
+                with obs_trace.span("cache:disk", "cache",
+                                    kind="template") as _sp:
+                    entry = self.disk.get(key)
+                    _sp["hit"] = entry is not None
                 if entry is not None:
                     self.stats.disk_template_hits += 1
                     self._insert(self._templates, key, entry,
                                  self.template_capacity)
             if entry is None and self.remote is not None:
-                entry = self.remote.get(key)
+                with obs_trace.span("cache:remote", "cache",
+                                    kind="template") as _sp:
+                    entry = self.remote.get(key)
+                    _sp["hit"] = entry is not None
                 if entry is not None:
                     self.stats.remote_template_hits += 1
                     self._insert(self._templates, key, entry,
@@ -613,12 +626,18 @@ class JITCache:
         with self._lock:
             g = self._frontends.get(key)
             if g is None and self.disk is not None:
-                g = self.disk.get(key)
+                with obs_trace.span("cache:disk", "cache",
+                                    kind="frontend") as _sp:
+                    g = self.disk.get(key)
+                    _sp["hit"] = g is not None
                 if g is not None:
                     self._insert(self._frontends, key, g,
                                  self._frontend_capacity)
             if g is None and self.remote is not None:
-                g = self.remote.get(key)
+                with obs_trace.span("cache:remote", "cache",
+                                    kind="frontend") as _sp:
+                    g = self.remote.get(key)
+                    _sp["hit"] = g is not None
                 if g is not None:
                     self.stats.remote_frontend_hits += 1
                     self._insert(self._frontends, key, g,

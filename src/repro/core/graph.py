@@ -442,3 +442,68 @@ def partition_graph(graph: KernelGraph, spec: OverlaySpec,
         part.deps = sorted({owner[ref[1]] for ref in part.ext
                             if ref[0] == "node"})
     return partitions
+
+
+def partition_graph_grouped(graph: KernelGraph, spec: OverlaySpec,
+                            groups: Sequence[Sequence[int]],
+                            max_partition_fus: Optional[int] = None
+                            ) -> List[Partition]:
+    """Cut a frozen graph along an *explicit* grouping of node ids.
+
+    ``groups`` must list every node id exactly once, as consecutive
+    intervals of the graph's topological order — the same interval shape
+    the greedy cut produces, which keeps the partition DAG acyclic (every
+    cross-group edge points backward).  Each group is validated against
+    the identical feasibility checks :func:`partition_graph` applies
+    (fuse compatibility, FU/IO budget, at least one replica), so a
+    caller-chosen cut — e.g. the profile-guided re-cutter — can never
+    produce a partition the greedy cut would have refused.
+    """
+    if not graph.frozen:
+        raise GraphError(f"graph {graph.name} must be frozen before "
+                         f"partitioning (end the capture block)")
+    order = [n.nid for n in graph.toposort()]
+    flat = [nid for grp in groups for nid in grp]
+    if flat != order:
+        raise GraphError(
+            f"{graph.name}: groups must cover the topological order as "
+            f"consecutive intervals (got {flat}, want {order})")
+    fu_budget = spec.n_fus if max_partition_fus is None \
+        else min(max_partition_fus, spec.n_fus)
+    consumers = _graph_consumers(graph)
+    by_nid = {n.nid: n for n in graph.nodes}
+
+    partitions: List[Partition] = []
+    for gi, grp in enumerate(groups):
+        nodes = [by_nid[nid] for nid in grp]
+        head = nodes[0]
+        for n in nodes[1:]:
+            if not head.opts.fuse_compatible(n.opts):
+                raise GraphError(
+                    f"{graph.name}: group {gi} mixes fuse-incompatible "
+                    f"options (N{head.nid} vs N{n.nid})")
+        try:
+            part = _fuse_partition(graph, nodes, index=gi,
+                                   consumers=consumers)
+        except FusionError as e:
+            raise GraphError(f"{graph.name}: group {gi} does not "
+                             f"fuse: {e}") from e
+        fug = to_fu_graph(part.dfg, dsp_per_fu=spec.dsp_per_fu)
+        if fug.n_fus > fu_budget or fug.n_io > spec.n_io:
+            raise GraphError(
+                f"{graph.name}: group {gi} ({part.dfg.name}) needs "
+                f"{fug.n_fus} FUs / {fug.n_io} IO, budget is "
+                f"{fu_budget} FUs / {spec.n_io} IO")
+        if plan_replication(fug, spec).replicas < 1:
+            raise GraphError(
+                f"{graph.name}: group {gi} ({part.dfg.name}) admits "
+                f"no replica on {spec.width}x{spec.height}")
+        partitions.append(part)
+
+    owner: Dict[int, int] = {}
+    for idx, part in enumerate(partitions):
+        for nid in part.node_ids:
+            owner[nid] = idx
+        part.deps = sorted({owner[ref[1]] for ref in part.ext
+                            if ref[0] == "node"})
+    return partitions

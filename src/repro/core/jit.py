@@ -68,6 +68,7 @@ from repro.core.program import OverlayProgram, compile_program
 from repro.core.replicate import ReplicationPlan, plan_replication, \
     throughput_gops
 from repro.core.route import RoutingResult, route
+from repro.obs import trace as obs_trace
 
 __all__ = ["CompiledKernel", "CompileOptions", "DEFAULT_MIN_TEMPLATE_FILL",
            "jit_compile", "lower_cached", "lower_to_dfg", "overlay_jit"]
@@ -241,8 +242,10 @@ def jit_compile(kernel: Union[str, Callable, DFG],
     # source hash, computable without parsing), so a warm process skips
     # even the parse+optimize pipeline
     t0 = time.perf_counter()
-    g = lower_cached(kernel, n_inputs, name, cache=cache)
-    fault_point("frontend", g.name)
+    with obs_trace.span("jit:frontend", "compile") as _sp:
+        g = lower_cached(kernel, n_inputs, name, cache=cache)
+        fault_point("frontend", g.name)
+        _sp["kernel"] = g.name
     times["frontend"] = (time.perf_counter() - t0) * 1e3
 
     if opts.verify_level != "off":
@@ -253,17 +256,21 @@ def jit_compile(kernel: Union[str, Callable, DFG],
         from repro.analysis.dfg_checks import assert_clean
         t0 = time.perf_counter()
         try:
-            assert_clean(g, origin="jit")
+            with obs_trace.span("jit:verify", "compile", kernel=g.name):
+                assert_clean(g, origin="jit")
         finally:
             times["verify"] = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()
-    fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
+    with obs_trace.span("jit:fuse", "compile", kernel=g.name):
+        fug = to_fu_graph(g, dsp_per_fu=spec.dsp_per_fu)
     times["fuse"] = (time.perf_counter() - t0) * 1e3
 
     t0 = time.perf_counter()
-    plan = plan_replication(fug, spec, max_replicas=opts.max_replicas,
-                            fu_headroom=fu_headroom, io_headroom=io_headroom)
+    with obs_trace.span("jit:replicate", "compile", kernel=g.name):
+        plan = plan_replication(fug, spec, max_replicas=opts.max_replicas,
+                                fu_headroom=fu_headroom,
+                                io_headroom=io_headroom)
     if plan.replicas == 0:
         from repro.core.place import PlacementError
         raise PlacementError(
@@ -277,7 +284,9 @@ def jit_compile(kernel: Union[str, Callable, DFG],
                              free_fus=spec.n_fus - fu_headroom,
                              free_io=spec.n_io - io_headroom,
                              opts=opts, fug=fug)
-        hit = cache.get(key)
+        with obs_trace.span("jit:cache", "compile", kernel=g.name) as _sp:
+            hit = cache.get(key)
+            _sp["hit"] = hit is not None
         if hit is not None:
             if opts.verify_level != "full":
                 return hit
@@ -333,14 +342,20 @@ def jit_compile(kernel: Union[str, Callable, DFG],
         while replicas >= 1:
             try:
                 t0 = time.perf_counter()
-                placement = place(fug, spec, replicas=replicas,
-                                  seed=opts.seed, effort=opts.place_effort)
+                with obs_trace.span("jit:place", "compile", kernel=g.name,
+                                    replicas=replicas):
+                    placement = place(fug, spec, replicas=replicas,
+                                      seed=opts.seed,
+                                      effort=opts.place_effort)
                 t_place = (time.perf_counter() - t0) * 1e3
                 t0 = time.perf_counter()
-                routing = route(fug, spec, placement, replicas=replicas)
+                with obs_trace.span("jit:route", "compile", kernel=g.name):
+                    routing = route(fug, spec, placement, replicas=replicas)
                 t_route = (time.perf_counter() - t0) * 1e3
                 t0 = time.perf_counter()
-                lat = balance(fug, spec, routing)
+                with obs_trace.span("jit:latency", "compile",
+                                    kernel=g.name):
+                    lat = balance(fug, spec, routing)
                 t_lat = (time.perf_counter() - t0) * 1e3
                 break
             except (RoutingError, LatencyError) as e:
@@ -374,8 +389,9 @@ def jit_compile(kernel: Union[str, Callable, DFG],
         pr_path = "template"
 
     t0 = time.perf_counter()
-    bs = generate(fug, spec, placement, routing, lat, plan.replicas)
-    prog = compile_program(fug.dfg)
+    with obs_trace.span("jit:bitstream", "compile", kernel=g.name):
+        bs = generate(fug, spec, placement, routing, lat, plan.replicas)
+        prog = compile_program(fug.dfg)
     times["bitstream"] = (time.perf_counter() - t0) * 1e3
 
     ck = CompiledKernel(g.name, fug.dfg, fug, spec, plan, placement,
@@ -417,9 +433,11 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
     built = False
     if tmpl is None:
         try:
-            tmpl = template_mod.build_template(fug, spec, seed=seed,
-                                               effort=place_effort,
-                                               target=plan.replicas)
+            with obs_trace.span("jit:template_build", "compile",
+                                kernel=g.name):
+                tmpl = template_mod.build_template(fug, spec, seed=seed,
+                                                   effort=place_effort,
+                                                   target=plan.replicas)
         except template_mod.TemplateError:
             if pr_mode == "template":
                 raise
@@ -439,14 +457,17 @@ def _template_par(fug: FUGraph, g: DFG, spec: OverlaySpec,
     if built and tmpl.build_ms.get("scan", 0.0) > 0.0:
         times["template_scan"] = tmpl.build_ms["scan"]
     t0 = time.perf_counter()
-    fault_point("stamp", g.name)
-    placement, routing, lat = template_mod.stamp(tmpl, spec, replicas)
+    with obs_trace.span("jit:stamp", "compile", kernel=g.name,
+                        replicas=replicas):
+        fault_point("stamp", g.name)
+        placement, routing, lat = template_mod.stamp(tmpl, spec, replicas)
     times["stamp"] = (time.perf_counter() - t0) * 1e3
     if replicas < plan.replicas:
         t0 = time.perf_counter()
-        placement, routing, lat, replicas = template_mod.gap_fill(
-            fug, spec, placement, routing, lat, plan.replicas,
-            seed=seed, effort=place_effort)
+        with obs_trace.span("jit:infill", "compile", kernel=g.name):
+            placement, routing, lat, replicas = template_mod.gap_fill(
+                fug, spec, placement, routing, lat, plan.replicas,
+                seed=seed, effort=place_effort)
         times["infill"] = (time.perf_counter() - t0) * 1e3
     if replicas != plan.replicas:
         plan = plan.with_replicas(fug, replicas, "stamp")

@@ -34,6 +34,7 @@ import math
 from typing import List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from repro.core.faults import DeviceLostError, fault_point
+from repro.obs.trace import active_tracer
 
 if TYPE_CHECKING:                                     # pragma: no cover
     from repro.core.runtime import Buffer, Context, Kernel
@@ -229,6 +230,27 @@ class CommandQueue:
         ev._kernel = kernel
         self.events.append(ev)
         self._last_event = ev
+        tr = active_tracer()
+        if tr is not None:
+            # project the modelled device timeline into the trace: one
+            # track per (device, tenant) submission stream, with the queue
+            # wait, the config charge and the execution window as separate
+            # slices at their *modelled* µs coordinates
+            track = f"dev:{self.device.name}" + \
+                (f"/{self.tenant}" if self.tenant else "")
+            if t_submit > ready:
+                # deps were done at `ready` but the engine (or a config
+                # boundary) held the kernel back until t_submit
+                tr.add_modelled(f"wait:{ev.kernel_name}", track, ready,
+                                t_submit - ready, cat="queue",
+                                gap_us=ev.queue_delay_us)
+            if config_us > 0.0:
+                tr.add_modelled(f"config:{ev.kernel_name}", track,
+                                t_submit, config_us, cat="device",
+                                config_id=config_id)
+            tr.add_modelled(ev.kernel_name, track, ev.t_start_us, exec_us,
+                            cat="device", items=kernel.work_items,
+                            replicas=ck.plan.replicas)
         return ev
 
     def enqueue_barrier(self) -> Event:

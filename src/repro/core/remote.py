@@ -68,6 +68,7 @@ from repro.core.cache import (CacheKey, WireStaleError, decode_blob,
                               encode_blob)
 from repro.core.faults import CorruptedFault, InjectedFault, fault_point
 from repro.core.recovery import CircuitBreaker, RetryPolicy
+from repro.obs import trace as obs_trace
 
 #: modelled one-way fetch latency of a healthy same-region endpoint (µs)
 DEFAULT_LATENCY_US = 2_000.0
@@ -358,54 +359,65 @@ class RemoteCache:
         for ep in self._candidates():
             if attempts > budget:
                 break
-            try:
-                blob, us = ep.read(key, addr)
-            except CorruptedFault:
-                # injected torn payload: the bytes are damaged, not the
-                # endpoint — quarantine, never retry the same bytes
-                self._quarantine_addr(addr)
-                self.stats.bump("misses")
-                return None
-            except (RemoteUnavailable, InjectedFault):
-                attempts += 1
-                self.stats.bump("read_errors")
-                self.breakers[ep.name].record_failure()
-                continue
-            self.breakers[ep.name].record_success()
-            if blob is None:
-                self.stats.bump("misses")
-                return None
-            if us > self.hedge_deadline_us:
-                # straggler fetch: race a hedged local rebuild.  Modelled
-                # race — the rebuild starts at the deadline and needs
-                # rebuild_est_us more; the fetch needs (us) total
-                est = rebuild_est_us if rebuild_est_us is not None \
-                    else self.rebuild_est_us
-                self.stats.bump("hedges_started")
-                if self.hedge_deadline_us + est < us:
-                    # local rebuild lands first: abandon the fetch (miss);
-                    # the caller's cold build IS the hedge winning
-                    self.stats.bump("hedges_won")
+            with obs_trace.span("remote:fetch", "cache",
+                                endpoint=ep.name) as _sp:
+                try:
+                    blob, us = ep.read(key, addr)
+                except CorruptedFault:
+                    # injected torn payload: the bytes are damaged, not the
+                    # endpoint — quarantine, never retry the same bytes
+                    _sp["outcome"] = "corrupt"
+                    self._quarantine_addr(addr)
                     self.stats.bump("misses")
                     return None
-                self.stats.bump("hedges_lost")
-            try:
-                obj = decode_blob(key, blob)
-            except WireStaleError:
-                self.stats.bump("invalidated")
-                ep.store.delete(addr)
-                self.stats.bump("misses")
-                return None
-            except Exception:
-                # checksum mismatch / unpicklable: quarantine so the next
-                # reader is not poisoned, and report a miss — the entry
-                # must NEVER reach the local memory/disk tiers
-                self._quarantine_addr(addr)
-                self.stats.bump("misses")
-                return None
-            self.stats.bump("hits")
-            self.stats.note_fetch_us(us)
-            return obj
+                except (RemoteUnavailable, InjectedFault):
+                    _sp["outcome"] = "error"
+                    attempts += 1
+                    self.stats.bump("read_errors")
+                    self.breakers[ep.name].record_failure()
+                    continue
+                self.breakers[ep.name].record_success()
+                if blob is None:
+                    _sp["outcome"] = "absent"
+                    self.stats.bump("misses")
+                    return None
+                _sp["fetch_us"] = us
+                if us > self.hedge_deadline_us:
+                    # straggler fetch: race a hedged local rebuild.  Modelled
+                    # race — the rebuild starts at the deadline and needs
+                    # rebuild_est_us more; the fetch needs (us) total
+                    est = rebuild_est_us if rebuild_est_us is not None \
+                        else self.rebuild_est_us
+                    self.stats.bump("hedges_started")
+                    if self.hedge_deadline_us + est < us:
+                        # local rebuild lands first: abandon the fetch (miss);
+                        # the caller's cold build IS the hedge winning
+                        _sp["outcome"] = "hedge_won"
+                        self.stats.bump("hedges_won")
+                        self.stats.bump("misses")
+                        return None
+                    _sp["hedge"] = "lost"
+                    self.stats.bump("hedges_lost")
+                try:
+                    obj = decode_blob(key, blob)
+                except WireStaleError:
+                    _sp["outcome"] = "stale"
+                    self.stats.bump("invalidated")
+                    ep.store.delete(addr)
+                    self.stats.bump("misses")
+                    return None
+                except Exception:
+                    # checksum mismatch / unpicklable: quarantine so the
+                    # next reader is not poisoned, and report a miss — the
+                    # entry must NEVER reach the local memory/disk tiers
+                    _sp["outcome"] = "corrupt"
+                    self._quarantine_addr(addr)
+                    self.stats.bump("misses")
+                    return None
+                _sp["outcome"] = "hit"
+                self.stats.bump("hits")
+                self.stats.note_fetch_us(us)
+                return obj
         # endpoints exhausted (outage / retry budget): degrade to local
         self.stats.bump("degraded")
         self.stats.bump("misses")

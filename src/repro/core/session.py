@@ -66,6 +66,7 @@ from repro.core.queue import CommandQueue, Event, user_event
 from repro.core.recovery import RecoveryStats, RetryPolicy
 from repro.core.runtime import (Buffer, Context, Device, Platform,  # noqa: F401 — Device re-exported for Session users
                                 Program, Scheduler)
+from repro.obs import trace as obs_trace
 
 
 class SessionError(RuntimeError):
@@ -243,7 +244,10 @@ class Session:
                  use_overlay_executor: bool = False,
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
-                 remote=None):
+                 remote=None,
+                 tracer=None,
+                 metrics=None,
+                 profiles=None):
         self.scheduler = Scheduler(
             list(devices) if devices else Platform.default().devices,
             cache=cache, persist_dir=persist_dir, policy=policy)
@@ -262,6 +266,17 @@ class Session:
         # every fault_point is a single thread-local read — nothing on the
         # fault-free hot path (gated in benchmarks/jit_cache_perf.py)
         self.faults = faults
+        # observability plane (repro.obs): the tracer is activated
+        # thread-locally at exactly the fault plane's activation sites
+        # (worker-pool builds, hedge racers, every enqueue), so spans from
+        # racing threads nest coherently; with no tracer every probe is a
+        # single thread-local read — nothing on the warm hit path (gated
+        # in benchmarks/trace_overhead_perf.py).  ``profiles`` (a
+        # repro.obs.ProfileStore) records per-partition replay
+        # measurements at the end of every launch()
+        self.tracer = tracer
+        self.metrics = metrics
+        self.profiles = profiles
         self.retry = retry if retry is not None else RetryPolicy()
         self.recovery = RecoveryStats()
         self.scheduler.configure_breakers(self.retry.breaker_threshold,
@@ -295,6 +310,15 @@ class Session:
         self._stats_sections: Dict[str, Callable[[], dict]] = {}  # lock: _lock
         self._t0 = time.perf_counter()
         self._closed = False  # lock: _lock
+        if metrics is not None:
+            metrics.install(self)          # stats()["obs"]
+
+    #: section names :meth:`stats` always emits itself — providers
+    #: registered through :meth:`register_stats_section` may not shadow
+    #: them (the dashboard would silently lose a built-in blob)
+    BUILTIN_SECTIONS = frozenset({
+        "cache", "devices", "inflight", "queues", "graph_plans", "config",
+        "recovery", "disk", "remote", "faults", "profiles"})
 
     # ------------------------------------------------------------ plumbing
     @property
@@ -382,7 +406,10 @@ class Session:
             else self.retry.max_retries
         try:
             with faults_mod.activate(self.faults), \
-                    recovery_mod.activate_stats(self.recovery):
+                    obs_trace.activate(self.tracer), \
+                    recovery_mod.activate_stats(self.recovery), \
+                    obs_trace.span("jit:build", "compile",
+                                   kernel=opts.name or fp[:12]):
                 attempt = 0
                 while True:
                     record["attempts"] = attempt + 1
@@ -423,7 +450,10 @@ class Session:
 
         def run(o: CompileOptions, tag: str) -> None:
             with faults_mod.activate(plan), \
-                    recovery_mod.activate_stats(self.recovery):
+                    obs_trace.activate(self.tracer), \
+                    recovery_mod.activate_stats(self.recovery), \
+                    obs_trace.span(f"jit:racer:{tag}", "compile",
+                                   kernel=o.name or fp[:12]):
                 try:
                     resq.put((tag, self.scheduler.build_opts(
                         source, o, tenant=tenant, inflight=booking,
@@ -546,7 +576,8 @@ class Session:
             dev = prog.ctx.device.name
             q = self.queue_for(tenant, dev)
             try:
-                with faults_mod.activate(self.faults):
+                with faults_mod.activate(self.faults), \
+                        obs_trace.activate(self.tracer):
                     ev = q.enqueue_kernel(
                         prog.create_kernel().set_args(*bufs),
                         wait_for=deps, label=label)
@@ -671,7 +702,8 @@ class Session:
         return KernelGraph(gname, tenant=tenant, lower=lower)
 
     def instantiate(self, graph: KernelGraph, tenant: Optional[str] = None,
-                    max_partition_fus: Optional[int] = None) -> GraphExec:
+                    max_partition_fus: Optional[int] = None,
+                    plan: Optional[Sequence[Partition]] = None) -> GraphExec:
         """Compile a recorded graph into packed overlay configurations.
 
         The DAG is cut into partitions (dependency-adjacent nodes fused
@@ -681,7 +713,13 @@ class Session:
         futures-based, single-flight deduplicated, and keyed on a content
         hash of the fused DFG + opts — so a repeat instantiation (same
         process or after a restart, via the disk tier) runs no compiler
-        stage.  Returns immediately; builds land on the worker pool."""
+        stage.  Returns immediately; builds land on the worker pool.
+
+        ``plan`` supplies a precomputed partition list (e.g. the
+        profile-guided re-cutter's explicit cut built with
+        :func:`repro.core.graph.partition_graph_grouped`); it bypasses
+        the greedy cut and the plan memo but rides the same verification
+        gate and the same warm compile path."""
         graph.freeze()                    # no-op when capture already froze
         if max_partition_fus is not None and max_partition_fus < 1:
             raise ValueError(f"max_partition_fus must be >= 1, "
@@ -692,30 +730,77 @@ class Session:
                     if n.opts.max_partition_fus is not None]
             max_partition_fus = min(caps) if caps else None
         key = make_graph_key(graph.fingerprint(), spec, max_partition_fus)
+        if plan is not None:
+            partitions = self._verified_plan(graph, list(plan))
+            tenant = tenant if tenant is not None else graph.tenant
+            futures = [self.compile(p.dfg, p.opts, tenant=tenant)
+                       for p in partitions]
+            return GraphExec(self, graph, partitions, futures, tenant)
         with self._lock:
             partitions = self._graph_plans.get(key)
         if partitions is None:
-            partitions = partition_graph(
-                graph, spec, max_partition_fus=max_partition_fus)
-            if any(n.opts.verify_level != "off" for n in graph.nodes):
-                # any node opting into verification gates the whole cut:
-                # run the A1xx race/alias analysis on the fresh plan before
-                # it is memoized or a single partition build is submitted
-                from repro.analysis import (ERROR, VerificationError,
-                                            check_graph, check_partitions)
-                diags = check_graph(graph) + check_partitions(graph,
-                                                              partitions)
-                bad = [d for d in diags if d.severity == ERROR]
-                if bad:
-                    raise VerificationError(
-                        f"{graph.name}: partition plan failed verification",
-                        bad)
+            with obs_trace.activate(self.tracer), \
+                    obs_trace.span("graph:partition", "compile",
+                                   graph=graph.name):
+                partitions = partition_graph(
+                    graph, spec, max_partition_fus=max_partition_fus)
+            partitions = self._verified_plan(graph, partitions)
             with self._lock:
                 self._graph_plans.setdefault(key, partitions)
         tenant = tenant if tenant is not None else graph.tenant
         futures = [self.compile(p.dfg, p.opts, tenant=tenant)
                    for p in partitions]
         return GraphExec(self, graph, partitions, futures, tenant)
+
+    def _verified_plan(self, graph: KernelGraph, partitions):
+        """Gate a partition plan through the A1xx race/alias analysis
+        when any node opted into verification (shared by the greedy cut
+        and caller-supplied plans); returns the plan unchanged."""
+        if any(n.opts.verify_level != "off" for n in graph.nodes):
+            # any node opting into verification gates the whole cut:
+            # run the A1xx race/alias analysis on the fresh plan before
+            # it is memoized or a single partition build is submitted
+            from repro.analysis import (ERROR, VerificationError,
+                                        check_graph, check_partitions)
+            diags = check_graph(graph) + check_partitions(graph,
+                                                          partitions)
+            bad = [d for d in diags if d.severity == ERROR]
+            if bad:
+                raise VerificationError(
+                    f"{graph.name}: partition plan failed verification",
+                    bad)
+        return partitions
+
+    def graph_plan(self, graph: KernelGraph,
+                   max_partition_fus: Optional[int] = None):
+        """The memoized partition plan for ``graph`` under the current
+        spec (None when never instantiated or not memoized) — what a
+        repeat :meth:`instantiate` would reuse."""
+        spec = self.scheduler.partition_spec()
+        if max_partition_fus is None:
+            caps = [n.opts.max_partition_fus for n in graph.nodes
+                    if n.opts.max_partition_fus is not None]
+            max_partition_fus = min(caps) if caps else None
+        key = make_graph_key(graph.fingerprint(), spec, max_partition_fus)
+        with self._lock:
+            return self._graph_plans.get(key)
+
+    def adopt_graph_plan(self, graph: KernelGraph,
+                         partitions: Sequence[Partition],
+                         max_partition_fus: Optional[int] = None) -> None:
+        """Replace the memoized partition plan for ``graph``: every
+        future :meth:`instantiate` under the same (spec, budget) key
+        reuses ``partitions`` — warm, since the adopter (the re-cutter)
+        already compiled them through the single-flight path."""
+        graph.freeze()
+        spec = self.scheduler.partition_spec()
+        if max_partition_fus is None:
+            caps = [n.opts.max_partition_fus for n in graph.nodes
+                    if n.opts.max_partition_fus is not None]
+            max_partition_fus = min(caps) if caps else None
+        key = make_graph_key(graph.fingerprint(), spec, max_partition_fus)
+        with self._lock:
+            self._graph_plans[key] = list(partitions)
 
     def launch(self, gexec: GraphExec, *inputs,
                wait_for: Sequence[Event] = (),
@@ -767,6 +852,14 @@ class Session:
                 self.recovery.bump("fallback_nodewise")
             events.append(self._nodewise_partition_event(
                 graph, p, argv, dep_evs, tenant, f"{label}:nodewise"))
+        if self.profiles is not None:
+            # observability plane: fold this replay's per-partition events
+            # into the graph's persistent ReplayProfile (events align with
+            # partitions by index; the store ignores replays where the
+            # nodewise ladder replaced a fused kernel)
+            with obs_trace.activate(self.tracer):
+                self.profiles.record(gexec, events,
+                                     self.scheduler.partition_spec())
         outputs = tuple(events[si].outputs[pos] for si, pos in gexec._outs)
         t_end = max(e.t_end_us for e in events)
         return Event(kernel_name=f"graph:{graph.name}", t_queued_us=0.0,
@@ -927,7 +1020,13 @@ class Session:
         """Attach a subsystem dashboard to :meth:`stats`: ``provider()``
         is called on every stats() and its dict lands under ``name``
         (the inference server registers ``"serving"`` this way).
-        Re-registering a name replaces its provider."""
+        Re-registering a name replaces its provider; a name stats()
+        emits itself (:attr:`BUILTIN_SECTIONS`) is refused — it would
+        silently shadow a built-in dashboard blob."""
+        if name in self.BUILTIN_SECTIONS:
+            raise SessionError(
+                f"stats section {name!r} shadows a built-in section "
+                f"(reserved: {', '.join(sorted(self.BUILTIN_SECTIONS))})")
         with self._lock:
             self._stats_sections[name] = provider
 
@@ -939,7 +1038,8 @@ class Session:
         via cache internals), the fleet remote tier's dashboard when one
         is attached, the fault plan's injection tallies when chaos is
         on, and every section a subsystem registered through
-        :meth:`register_stats_section` (e.g. ``"serving"``)."""
+        :meth:`register_stats_section` (e.g. ``"serving"``) in
+        deterministic name order, after every built-in section."""
         recovery = self.recovery.as_dict()
         recovery["breaker_trips"] = sum(
             b.trips for b in self.scheduler.breakers.values())
@@ -966,8 +1066,10 @@ class Session:
             out["remote"] = remote.stats_dict()
         if self.faults is not None:
             out["faults"] = self.faults.as_dict()
+        if self.profiles is not None:
+            out["profiles"] = self.profiles.stats_dict()
         with self._lock:
-            sections = list(self._stats_sections.items())
+            sections = sorted(self._stats_sections.items())
         for name, provider in sections:     # outside the lock: providers
             out[name] = provider()          # may re-enter Session APIs
         return out

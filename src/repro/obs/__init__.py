@@ -1,0 +1,58 @@
+"""``repro.obs`` — tracing, metrics and profile-guided re-cutting.
+
+The observability layer for the overlay JIT runtime:
+
+* :mod:`repro.obs.trace` — ambient span tracer (the ``faults.py``
+  thread-local pattern: the disabled path is one TLS read);
+* :mod:`repro.obs.metrics` — counters / gauges / histograms pluggable
+  into ``Session.register_stats_section``;
+* :mod:`repro.obs.export` — Chrome-trace (Perfetto) JSON exporter;
+* :mod:`repro.obs.profile` — content-addressed replay profiles persisted
+  through the disk/remote cache tiers;
+* :mod:`repro.obs.recut` — profile-guided graph re-cutter (never-worse
+  swap through the warm single-flight compile path);
+* ``python -m repro.obs`` — trace a demo pipeline and export the JSON.
+
+``profile``/``recut`` are imported lazily: they depend on ``repro.core``,
+and the core runtime imports ``repro.obs.trace`` for its probe points —
+eager imports here would make that circular.
+"""
+
+from repro.obs.export import chrome_trace, render_summary, write_chrome_trace
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (CATEGORIES, Span, Tracer, activate,
+                             active_tracer, modelled, span)
+
+__all__ = [
+    "CATEGORIES", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "PartitionProfile", "ProfileStore", "ReCutResult", "ReCutter",
+    "ReplayProfile", "Span", "Tracer", "activate", "active_tracer",
+    "chrome_trace", "estimate_cut_us", "hot_profiles", "modelled",
+    "plan_recut", "profile_key", "render_summary", "span",
+    "write_chrome_trace",
+]
+
+_LAZY = {
+    "PartitionProfile": "repro.obs.profile",
+    "ProfileStore": "repro.obs.profile",
+    "ReplayProfile": "repro.obs.profile",
+    "hot_profiles": "repro.obs.profile",
+    "profile_key": "repro.obs.profile",
+    "ReCutResult": "repro.obs.recut",
+    "ReCutter": "repro.obs.recut",
+    "estimate_cut_us": "repro.obs.recut",
+    "plan_recut": "repro.obs.recut",
+}
+
+
+def __getattr__(name):
+    modname = _LAZY.get(name)
+    if modname is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(modname), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

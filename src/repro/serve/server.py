@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.queue import Event, user_event
 from repro.core.session import Session
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import ModelBatch
 from repro.serve.models import ServedModel, build_zoo
 from repro.serve.request import (DONE, PREFILLING, QUEUED, REJECTED,
@@ -106,6 +107,9 @@ class InferenceServer:
         self._rejected = 0  # lock: _lock
         self._degraded_steps = 0  # lock: _lock
         self._latencies: Dict[str, List[float]] = {}  # lock: _lock
+        # completions whose end-to-end latency exceeded their class's
+        # target_p99_us, keyed by class name (stats()["serving"] + obs)
+        self._slo_violations: Dict[str, int] = {}  # lock: _lock
         session.register_stats_section("serving", self._stats_section)
 
     # -------------------------------------------------------------- intake
@@ -170,6 +174,18 @@ class InferenceServer:
                         if r.t_done_us is not None), default=0.0)
 
     def _step_model(self, batch: ModelBatch) -> bool:  # lock: held(_lock)
+        # the serving loop is the outermost boundary: activate the
+        # session's tracer here so launches (and their compile/cache/queue
+        # probes) nest under the serving iteration
+        with obs_trace.activate(self.session.tracer), \
+                obs_trace.span(f"serve:step:{batch.model.name}",
+                               "serving") as _sp:
+            progressed = self._step_model_traced(batch, _sp)
+            _sp["progressed"] = progressed
+            return progressed
+
+    def _step_model_traced(self, batch: ModelBatch,
+                           _sp) -> bool:  # lock: held(_lock)
         model = batch.model
         now = batch.t_us
         if not batch.members:
@@ -179,6 +195,7 @@ class InferenceServer:
                 now = nxt
                 batch.t_us = now
         joiners = batch.take_joiners(now)
+        _sp["joined"] = len(joiners)
         deps: List[Event] = []
         if batch.last_event is not None:
             deps.append(batch.last_event)
@@ -213,8 +230,15 @@ class InferenceServer:
             r.state = DONE
             r.t_done_us = ev.t_end_us
             self._completed += 1
-            self._latencies.setdefault(self.slo_of(r).name,
-                                       []).append(r.latency_us)
+            cls = self.slo_of(r)
+            self._latencies.setdefault(cls.name, []).append(r.latency_us)
+            if cls.target_p99_us > 0 and r.latency_us > cls.target_p99_us:
+                self._slo_violations[cls.name] = \
+                    self._slo_violations.get(cls.name, 0) + 1
+                metrics = self.session.metrics
+                if metrics is not None:
+                    metrics.counter(
+                        f"serving.slo_violations.{cls.name}").inc()
         return True
 
     def _launch_batched(self, gexec, states: List[np.ndarray],
@@ -290,6 +314,8 @@ class InferenceServer:
                        completed=self._completed,
                        rejected=self._rejected,
                        degraded_steps=self._degraded_steps,
+                       slo_violations=dict(
+                           sorted(self._slo_violations.items())),
                        models=models)
         out["latency_us"] = {
             cls: dict(n=len(v), p50=_percentile(v, 50.0),

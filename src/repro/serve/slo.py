@@ -13,9 +13,14 @@ treatment is decided:
     unbounded backlog (the modelled-latency percentile for the class would
     otherwise be meaningless);
   * ``target_p99_us`` is the class's modelled-latency objective.  The
-    server never *enforces* it — it drives the dashboard
-    (``Session.stats()["serving"]``) and the replica autoscaling hints
-    (a class running hot asks for more replicas before it misses).
+    server does not *enforce* it (no request is killed for missing it),
+    but it is *measured*: every completion whose end-to-end latency
+    exceeds the target counts as an SLO violation — per class in
+    ``Session.stats()["serving"]["slo_violations"]`` and, when a
+    :class:`~repro.obs.metrics.MetricsRegistry` is attached to the
+    Session, in the ``serving.slo_violations.<class>`` counters.  It
+    also drives the replica autoscaling hints (a class running hot asks
+    for more replicas before it misses).
 """
 
 from __future__ import annotations
